@@ -1,0 +1,64 @@
+"""Shared benchmark infrastructure: predictor training with disk cache.
+
+All paper benchmarks share one pool of trained GBDT predictors per
+(device, backend, op kind, whitebox) tuple, cached under reports/predictors
+so repeated benchmark runs are fast.  Scale knobs (--full) switch between
+a CI-sized run and the paper-scale dataset (12,500 configs per op kind).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Tuple
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.predictor import (LatencyPredictor, sample_conv_ops,   # noqa: E402
+                                  sample_linear_ops, train_predictor)
+from repro.core.predictor.gbdt import GBDTParams                      # noqa: E402
+
+REPORTS = Path(__file__).resolve().parents[1] / "reports"
+PRED_CACHE = REPORTS / "predictors"
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+N_TRAIN = 10_000 if FULL else 2_500
+N_ESTIMATORS = 300 if FULL else 120
+
+DEVICES = ("pixel4", "pixel5", "moto2022", "oneplus11")
+
+_memo: Dict[Tuple, LatencyPredictor] = {}
+
+
+def train_ops(kind: str, seed: int = 1):
+    if kind == "linear":
+        return sample_linear_ops(N_TRAIN, seed=seed)
+    return sample_conv_ops(N_TRAIN, seed=seed)
+
+
+def get_predictor(device: str, backend: str, kind: str,
+                  whitebox: bool = True) -> LatencyPredictor:
+    key = (device, backend, kind, whitebox, N_TRAIN, N_ESTIMATORS)
+    if key in _memo:
+        return _memo[key]
+    tag = f"{device}_{backend}_{kind}_{'wb' if whitebox else 'bb'}" \
+          f"_{N_TRAIN}_{N_ESTIMATORS}.pkl"
+    path = PRED_CACHE / tag
+    if path.exists():
+        p = LatencyPredictor.load(path)
+    else:
+        t0 = time.time()
+        p = train_predictor(train_ops(kind), device, backend,
+                            whitebox=whitebox,
+                            params=GBDTParams(n_estimators=N_ESTIMATORS))
+        print(f"  [train] {tag} ({time.time()-t0:.0f}s)")
+        p.save(path)
+    _memo[key] = p
+    return p
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,33 @@
+"""Fig. 2 — CPU vs GPU latency for linear ops (50, 3072) x (3072, C_out).
+
+Paper claim (OnePlus 11): the 3-thread CPU beats the GPU for C_out < ~425.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.simulator import true_latency_us
+from repro.core.types import LinearOp
+
+
+def run() -> list:
+    rows = []
+    # the GPU curve is spiky, so the curves cross more than once; report
+    # the last C_out where the CPU still wins (the paper's ~425 figure)
+    wins = [c for c in range(64, 1537, 16)
+            if true_latency_us(LinearOp(50, 3072, c), "oneplus11", "cpu3")
+            < true_latency_us(LinearOp(50, 3072, c), "oneplus11", "gpu")]
+    crossover = max(wins) if wins else 0
+    op = LinearOp(50, 3072, 425)
+    rows.append(csv_row("fig2_gpu_at_425",
+                        true_latency_us(op, "oneplus11", "gpu"),
+                        f"crossover_cout={crossover}"))
+    rows.append(csv_row("fig2_cpu3_at_425",
+                        true_latency_us(op, "oneplus11", "cpu3"),
+                        "paper_crossover~425"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

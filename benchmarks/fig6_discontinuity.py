@@ -1,0 +1,41 @@
+"""Fig. 6 — the two causes of discontinuity on mobile GPUs.
+
+(a) workgroup-count/latency correlation for linear ops (50, 768, C);
+(b) the conv kernel switch to Winograd at C_out = 128 for 3x3 conv on
+    (64, 64, 128) input.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.simulator import DEVICES, dispatch_for, true_latency_us
+from repro.core.types import ConvOp, LinearOp
+
+
+def run() -> list:
+    dev = "oneplus11"
+    spec = DEVICES[dev]
+    wgs, lats = [], []
+    for c in range(256, 2049, 8):
+        op = LinearOp(50, 768, c)
+        wgs.append(dispatch_for(op, spec).wg_count)
+        lats.append(true_latency_us(op, dev, "gpu"))
+    corr = float(np.corrcoef(wgs, lats)[0, 1])
+
+    below = ConvOp(64, 64, 128, 120, 3, 1)
+    above = ConvOp(64, 64, 128, 136, 3, 1)
+    k_below = dispatch_for(below, spec).kernel
+    k_above = dispatch_for(above, spec).kernel
+    return [
+        csv_row("fig6a_wg_latency_corr", corr * 100,
+                "corr_pct(workgroups,latency)"),
+        csv_row("fig6b_conv120", true_latency_us(below, dev, "gpu"),
+                f"kernel={k_below}"),
+        csv_row("fig6b_conv136", true_latency_us(above, dev, "gpu"),
+                f"kernel={k_above}(switch_at_128)"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

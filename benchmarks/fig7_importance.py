@@ -1,0 +1,39 @@
+"""Fig. 7 — GBDT gain importance of input features (conv, Moto 2022).
+
+Paper claim: workgroup size / workgroup count rank among the top features,
+motivating dispatch-feature augmentation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, get_predictor
+from repro.core.predictor.features import feature_names
+
+
+def run() -> list:
+    p = get_predictor("moto2022", "gpu", "conv", whitebox=True)
+    names = feature_names("conv", whitebox=True)
+    gains = np.zeros(len(names))
+    for model in p.models.values():
+        if model.feature_gain_ is not None \
+                and len(model.feature_gain_) == len(names):
+            gains += model.feature_gain_
+    order = np.argsort(gains)[::-1][:8]
+    rows = []
+    dispatch_in_top8 = 0
+    for rank, idx in enumerate(order):
+        name = names[idx]
+        if name in ("wg_size", "wg_count", "grid_x", "grid_y", "waves",
+                    "wave_quant", "occupancy", "wg_x", "wg_y",
+                    "log_padded_flops"):
+            dispatch_in_top8 += 1
+        rows.append(csv_row(f"fig7_rank{rank + 1}", float(gains[idx]),
+                            name))
+    rows.append(csv_row("fig7_dispatch_features_in_top8",
+                        float(dispatch_in_top8), "paper:wg_features_rank_high"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,41 @@
+"""Roofline summary table from the dry-run artifacts (deliverable g).
+
+Reads reports/dryrun/*.json (produced by `python -m repro.launch.dryrun`)
+and emits one row per (arch x shape x mesh) with the three roofline terms,
+the dominant bottleneck, and the useful-FLOPs ratio.  This benchmark does
+not lower anything itself — run the dry-run first.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import REPORTS, csv_row
+
+DRYRUN = REPORTS / "dryrun"
+
+
+def run() -> list:
+    rows = []
+    if not DRYRUN.exists():
+        return [csv_row("roofline_missing", 0.0,
+                        "run: python -m repro.launch.dryrun --all first")]
+    for path in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("status") == "skipped":
+            rows.append(csv_row(f"roofline_{path.stem}", 0.0,
+                                f"SKIP:{rec['reason'][:60]}"))
+            continue
+        dom = rec["bottleneck"]
+        t_dom = rec[f"t_{dom}_s"] * 1e6
+        rows.append(csv_row(
+            f"roofline_{path.stem}", t_dom,
+            f"bottleneck={dom},compute_ms={rec['t_compute_s']*1e3:.1f},"
+            f"memory_ms={rec['t_memory_s']*1e3:.1f},"
+            f"collective_ms={rec['t_collective_s']*1e3:.1f},"
+            f"useful={rec['useful_flops_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,55 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set BENCH_FULL=1 for
+paper-scale datasets (slower); default is a reduced but representative run.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tab2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import (fig2_crossover, fig5_prediction, fig6_discontinuity,
+                        fig7_importance, roofline_report, tab1_mape,
+                        tab2_speedup, tab3_e2e, tab4_ablation)
+
+SUITES = {
+    "fig2": fig2_crossover.run,
+    "fig5": fig5_prediction.run,
+    "fig6": fig6_discontinuity.run,
+    "fig7": fig7_importance.run,
+    "tab1": tab1_mape.run,
+    "tab2": tab2_speedup.run,
+    "tab3": tab3_e2e.run,
+    "tab4": tab4_ablation.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(SUITES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            for row in SUITES[name]():
+                print(row)
+        except Exception as e:                       # noqa: BLE001
+            print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")
+            raise
+        print(f"{name}_wallclock,{(time.time()-t0)*1e6:.0f},seconds="
+              f"{time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

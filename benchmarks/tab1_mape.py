@@ -1,0 +1,39 @@
+"""Table 1 — MAPE of the GBDT predictors per device/backend/op-kind.
+
+Paper values: GPU 3.7-9.0%, CPU 2.4-11.5% depending on device and kind.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEVICES, csv_row, get_predictor
+from repro.core.predictor import (mape, measure_ops, sample_conv_ops,
+                                  sample_linear_ops)
+
+_PAPER = {  # (device, kind, backend) -> paper MAPE %
+    ("pixel4", "linear", "gpu"): 4.4, ("pixel4", "conv", "gpu"): 8.5,
+    ("pixel5", "linear", "gpu"): 3.7, ("pixel5", "conv", "gpu"): 7.7,
+    ("moto2022", "linear", "gpu"): 4.0, ("moto2022", "conv", "gpu"): 9.0,
+    ("oneplus11", "linear", "gpu"): 3.7, ("oneplus11", "conv", "gpu"): 7.4,
+}
+
+
+def run() -> list:
+    rows = []
+    test_l = sample_linear_ops(400, seed=77)
+    test_c = sample_conv_ops(400, seed=77)
+    for dev in DEVICES:
+        for kind, test in (("linear", test_l), ("conv", test_c)):
+            for backend in ("gpu", "cpu1", "cpu2", "cpu3"):
+                p = get_predictor(dev, backend, kind,
+                                  whitebox=(backend == "gpu"))
+                y = measure_ops(test, dev, backend, seed=99)
+                m = mape(p.predict(test), y) * 100
+                paper = _PAPER.get((dev, kind, backend), "")
+                rows.append(csv_row(f"tab1_{dev}_{kind}_{backend}", m,
+                                    f"mape_pct(paper={paper})"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

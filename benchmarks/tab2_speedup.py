@@ -1,0 +1,67 @@
+"""Table 2 — co-execution speedups: GBDT-predicted partitioning vs grid
+search, per device and CPU thread count.
+
+Paper headline: Pixel 5 linear 3 threads GBDT 1.89x vs Search 2.01x.
+Grid search is evaluated on a subsample (as in the paper, 10% of cases).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEVICES, FULL, csv_row, get_predictor
+from repro.core.partitioner import (grid_search_partition, optimal_partition,
+                                    speedup_vs_gpu)
+from repro.core.predictor.dataset import eval_conv_ops, eval_linear_ops
+
+_PAPER = {  # (device, kind, threads) -> (gbdt, search)
+    ("pixel4", "linear", 3): (1.84, 1.92),
+    ("pixel5", "linear", 3): (1.89, 2.01),
+    ("moto2022", "linear", 3): (1.44, 1.49),
+    ("oneplus11", "linear", 3): (1.26, 1.35),
+    ("pixel4", "conv", 3): (1.69, 1.79),
+    ("pixel5", "conv", 3): (1.75, 1.87),
+    ("moto2022", "conv", 3): (1.39, 1.46),
+    ("oneplus11", "conv", 3): (1.35, 1.40),
+}
+
+N_PRED = 200 if FULL else 40
+N_GRID = 40 if FULL else 12
+
+
+def _subsample(ops, n, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(ops), size=min(n, len(ops)), replace=False)
+    return [ops[i] for i in idx]
+
+
+def run() -> list:
+    rows = []
+    # paper-scale eval sets: 2,039 linear / 2,051-class conv constructions
+    pool = {"linear": _subsample(eval_linear_ops(), 2039, seed=0),
+            "conv": eval_conv_ops()}
+    for dev in DEVICES:
+        for kind in ("linear", "conv"):
+            gp = get_predictor(dev, "gpu", kind, whitebox=True)
+            for threads in (1, 2, 3):
+                cp = get_predictor(dev, f"cpu{threads}", kind,
+                                   whitebox=False)
+                ops_p = _subsample(pool[kind], N_PRED, seed=threads)
+                sp = np.mean([
+                    speedup_vs_gpu(optimal_partition(o, cp, gp), dev,
+                                   threads) for o in ops_p])
+                # score grid search on a subset of the SAME ops so the
+                # comparison is apples-to-apples
+                ops_g = ops_p[:N_GRID]
+                sg = np.mean([
+                    speedup_vs_gpu(grid_search_partition(o, dev, threads),
+                                   dev, threads) for o in ops_g])
+                paper = _PAPER.get((dev, kind, threads), ("", ""))
+                rows.append(csv_row(
+                    f"tab2_{dev}_{kind}_{threads}t", sp * 1000,
+                    f"gbdt={sp:.2f}x,search={sg:.2f}x,"
+                    f"paper={paper[0]}/{paper[1]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,49 @@
+"""Table 3 — end-to-end speedups (VGG16, ResNet-18/34, Inception-v3) with
+GPU + 3 CPU threads co-execution.
+
+Paper headline: up to 1.67x / 1.79x / 1.27x / 1.27x average e2e speedups on
+Pixel 4 / Pixel 5 / Moto 2022 / OnePlus 11.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEVICES, csv_row, get_predictor
+from repro.core.networks import NETWORKS
+from repro.core.planner import plan_network
+from repro.core.predictor.train import MuxPredictor
+
+_PAPER_E2E = {
+    ("pixel4", "vgg16"): 1.14, ("pixel4", "resnet18"): 1.54,
+    ("pixel4", "resnet34"): 1.67, ("pixel4", "inception_v3"): 1.62,
+    ("pixel5", "vgg16"): 1.56, ("pixel5", "resnet18"): 1.78,
+    ("pixel5", "resnet34"): 1.76, ("pixel5", "inception_v3"): 1.79,
+    ("moto2022", "vgg16"): 1.08, ("moto2022", "resnet18"): 1.11,
+    ("moto2022", "resnet34"): 1.14, ("moto2022", "inception_v3"): 1.27,
+    ("oneplus11", "vgg16"): 1.05, ("oneplus11", "resnet18"): 1.25,
+    ("oneplus11", "resnet34"): 1.27, ("oneplus11", "inception_v3"): 1.17,
+}
+
+
+def run() -> list:
+    rows = []
+    threads = 3
+    for dev in DEVICES:
+        gp = MuxPredictor(get_predictor(dev, "gpu", "linear", whitebox=True),
+                          get_predictor(dev, "gpu", "conv", whitebox=True))
+        cp = MuxPredictor(
+            get_predictor(dev, f"cpu{threads}", "linear", whitebox=False),
+            get_predictor(dev, f"cpu{threads}", "conv", whitebox=False))
+        for name, fn in NETWORKS.items():
+            r = plan_network(fn(), cp, gp, threads=threads)
+            rows.append(csv_row(
+                f"tab3_{dev}_{name}", r.end_to_end_us,
+                f"base_ms={r.baseline_us/1e3:.1f},"
+                f"ind={r.individual_speedup:.2f}x,"
+                f"e2e={r.end_to_end_speedup:.2f}x,"
+                f"paper_e2e={_PAPER_E2E[(dev, name)]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,66 @@
+"""Table 4 — ablation on Moto 2022: (a) white-box feature augmentation,
+(b) SVM-polling sync vs the original event-notification overhead.
+
+Paper: linear 3-thread speedup 1.44x (ours) -> 1.37x (w/o augmentation) ->
+0.88x (original overhead); augmentation cuts linear MAPE 9.3% -> 4.4%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL, csv_row, get_predictor
+from repro.core.partitioner import optimal_partition, speedup_vs_gpu
+from repro.core.predictor import mape, measure_ops, sample_linear_ops
+from repro.core.predictor.dataset import eval_linear_ops
+from repro.core.sync import SyncMechanism
+
+N_OPS = 150 if FULL else 40
+
+
+def run() -> list:
+    dev = "moto2022"
+    threads = 3
+    rows = []
+
+    # (a) prediction ablation
+    test = sample_linear_ops(300, seed=55)
+    y = measure_ops(test, dev, "gpu", seed=66)
+    wb = get_predictor(dev, "gpu", "linear", whitebox=True)
+    bb = get_predictor(dev, "gpu", "linear", whitebox=False)
+    rows.append(csv_row("tab4_mape_whitebox", mape(wb.predict(test), y) * 100,
+                        "paper=4.4pct"))
+    rows.append(csv_row("tab4_mape_blackbox", mape(bb.predict(test), y) * 100,
+                        "paper=9.3pct"))
+
+    # (b) speedup ablation
+    rng = np.random.default_rng(4)
+    pool = eval_linear_ops()
+    ops = [pool[i] for i in rng.choice(len(pool), N_OPS, replace=False)]
+    cp = get_predictor(dev, f"cpu{threads}", "linear", whitebox=False)
+
+    def avg_speedup(pred_gpu, decide_mech, pay_mech):
+        """Decisions are made under `decide_mech`; the system pays
+        `pay_mech`.  The paper's "Original Overhead" row partitions as if
+        synchronization were cheap but executes with event notification —
+        that mismatch is what drives its speedups below 1.0x."""
+        return float(np.mean([
+            speedup_vs_gpu(optimal_partition(o, cp, pred_gpu,
+                                             mechanism=decide_mech),
+                           dev, threads, mechanism=pay_mech)
+            for o in ops]))
+
+    s_ours = avg_speedup(wb, SyncMechanism.SVM_POLL, SyncMechanism.SVM_POLL)
+    s_noaug = avg_speedup(bb, SyncMechanism.SVM_POLL,
+                          SyncMechanism.SVM_POLL)
+    s_event = avg_speedup(wb, SyncMechanism.SVM_POLL, SyncMechanism.EVENT)
+    rows.append(csv_row("tab4_speedup_ours", s_ours * 1000,
+                        f"{s_ours:.2f}x(paper=1.44)"))
+    rows.append(csv_row("tab4_speedup_no_augment", s_noaug * 1000,
+                        f"{s_noaug:.2f}x(paper=1.37)"))
+    rows.append(csv_row("tab4_speedup_event_overhead", s_event * 1000,
+                        f"{s_event:.2f}x(paper=0.88)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,49 @@
+"""Quickstart: partition the paper's ViT-Base-32 running-example layer.
+
+Trains the latency predictors for a Pixel 5, partitions the (50,768)x
+(768,3072) linear layer between GPU and 3 CPU threads, and compares the
+predictor-driven decision against exhaustive grid search — reproducing the
+Section 3.2 walk-through.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import (LinearOp, grid_search_partition,    # noqa: E402
+                        optimal_partition, speedup_vs_gpu)
+from repro.core.predictor import (sample_linear_ops,        # noqa: E402
+                                  train_predictor)
+
+
+def main():
+    device, threads = "pixel5", 3
+    print(f"== device={device}, {threads} CPU threads ==")
+    print("training latency predictors (GBDT, white-box features)...")
+    train = sample_linear_ops(2500, seed=1)
+    gpu_pred = train_predictor(train, device, "gpu", whitebox=True)
+    cpu_pred = train_predictor(train, device, f"cpu{threads}",
+                               whitebox=False)
+
+    op = LinearOp(L=50, C_in=768, C_out=3072)   # ViT-Base-32 MLP up-proj
+    dec = optimal_partition(op, cpu_pred, gpu_pred)
+    print(f"\npredictor decision: {dec.c_gpu} channels -> GPU, "
+          f"{dec.c_cpu} -> CPU")
+    print(f"predicted times: gpu {dec.pred_gpu_us:.0f}us "
+          f"cpu {dec.pred_cpu_us:.0f}us total {dec.pred_total_us:.0f}us")
+    s = speedup_vs_gpu(dec, device, threads)
+    print(f"measured speedup vs GPU-only: {s:.2f}x")
+
+    grid = grid_search_partition(op, device, threads)
+    sg = speedup_vs_gpu(grid, device, threads)
+    print(f"\ngrid-search oracle: {grid.c_gpu}/{grid.c_cpu} -> {sg:.2f}x")
+    print(f"predictor achieves {s/sg*100:.0f}% of the oracle speedup "
+          f"(paper: 1.89x vs 2.01x on Pixel 5)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param dense
+model for a few hundred steps on the synthetic pipeline and verify the
+loss decreases.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax                                               # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
+import numpy as np                                       # noqa: E402
+
+import dataclasses                                       # noqa: E402
+
+from repro.data import DataConfig, SyntheticTokenStream  # noqa: E402
+from repro.launch.steps import make_train_step           # noqa: E402
+from repro.models import build_model, get_config         # noqa: E402
+from repro.models.config import ModelConfig              # noqa: E402
+from repro.optim import AdamWConfig, init_adamw          # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: 12 layers, d=768, qwen-style GQA
+    cfg = dataclasses.replace(
+        get_config("codeqwen15_7b"),
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=2048, vocab_size=32000)
+    print(f"params: {cfg.param_count()/1e6:.0f}M")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    opt_cfg = AdamWConfig(lr=6e-4, total_steps=args.steps,
+                          warmup_steps=20)
+    train = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+    opt_state = init_adamw(params)
+    stream = iter(SyntheticTokenStream(cfg.vocab_size,
+                                       DataConfig(args.batch, args.seq,
+                                                  seed=0)))
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt_state, loss = train(params, opt_state, batch)
+        losses.append(float(loss))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {losses[-1]:.4f}")
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({(time.time()-t0)/args.steps:.2f}s/step)")
+    assert last < first, "training did not reduce the loss"
+    print("OK: loss decreased")
+
+
+if __name__ == "__main__":
+    main()

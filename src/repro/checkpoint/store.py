@@ -1,0 +1,72 @@
+"""Minimal dependency-free checkpointing of JAX pytrees.
+
+Layout: <dir>/<step>/manifest.json + one .npy per leaf (flattened key path).
+bfloat16 leaves are stored as uint16 views with a dtype tag (NumPy has no
+native bf16 serialization).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(re.sub(r"[^\w.]", "_", str(p)) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory, step: int, tree) -> Path:
+    out = Path(directory) / str(step)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest = {}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(leaf)
+        tag = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            tag = "bfloat16"
+        fname = f"{abs(hash(key)) % 10**12}.npy"
+        np.save(out / fname, arr)
+        manifest[key] = {"file": fname, "dtype": tag}
+    with open(out / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
+def restore_checkpoint(directory, step: int, template):
+    """Restore into the structure of `template` (same pytree shape)."""
+    src = Path(directory) / str(step)
+    with open(src / "manifest.json") as f:
+        manifest = json.load(f)
+    flat_template = _flatten(template)
+    restored = {}
+    for key in flat_template:
+        meta = manifest[key]
+        arr = np.load(src / meta["file"])
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        restored[key] = jnp.asarray(arr)
+    # rebuild tree in template order
+    leaves_paths = jax.tree_util.tree_flatten_with_path(template)
+    keys = ["/".join(re.sub(r"[^\w.]", "_", str(p)) for p in path)
+            for path, _ in leaves_paths[0]]
+    new_leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
+
+
+def latest_step(directory) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name) for p in d.iterdir() if p.name.isdigit()]
+    return max(steps) if steps else None

@@ -1,0 +1,5 @@
+"""One config module per assigned architecture (+ the paper's own models).
+
+Every config cites its source in the module docstring and instantiates a
+single `CONFIG: ModelConfig`.
+"""

@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution.
+
+ - simulator/   white-box performance models of the four mobile platforms
+ - predictor/   GBDT latency predictors with dispatch-feature augmentation
+ - partitioner  optimal output-channel splits (predictor- or search-driven)
+ - planner      end-to-end network partition planning
+ - sync         synchronization overhead models (event vs fine-grained SVM)
+ - coexec       TPU-native uneven channel-split execution (shard_map)
+ - networks     op graphs of the paper's end-to-end evaluation models
+"""
+from repro.core.types import ConvOp, LinearOp, Op
+from repro.core.sync import (SyncMechanism, collective_overhead_us,
+                             sync_overhead_us)
+from repro.core.partitioner import (PartitionDecision, grid_search_partition,
+                                    optimal_partition, realized_latency_us,
+                                    speedup_vs_gpu)
+from repro.core.planner import PlanReport, plan_network
+from repro.core.coexec import (SplitPlan, coexec_matmul, coexec_mesh,
+                               pack_weights, throughput_split)
+
+__all__ = [
+    "ConvOp", "LinearOp", "Op",
+    "SyncMechanism", "sync_overhead_us", "collective_overhead_us",
+    "PartitionDecision", "grid_search_partition", "optimal_partition",
+    "realized_latency_us", "speedup_vs_gpu",
+    "PlanReport", "plan_network",
+    "SplitPlan", "coexec_matmul", "coexec_mesh", "pack_weights",
+    "throughput_split",
+]

@@ -1,0 +1,109 @@
+"""TPU-native transfer of the paper's co-execution mechanism.
+
+The paper splits one operation's output channels across two heterogeneous
+compute devices that share memory.  On a TPU mesh the analogous structure is
+an **uneven channel split across two device groups of one mesh axis**:
+
+  * group 0 ("fast", the GPU analogue) owns `c_fast` output channels,
+  * group 1 ("slow", the CPU analogue) owns `C_out - c_fast`,
+
+with the split chosen by the same predictor-driven partitioner, where the
+per-group throughputs play the role of the CPU/GPU latency models and the
+all-gather that materializes the full output plays the role of
+`T_overhead` (see core/sync.collective_overhead_us).
+
+SPMD requires uniform per-device shapes, so both groups are padded to the
+same local width `c_pad` and masked — the exact analogue of the paper's
+channel-alignment granularity (grid step 8 / float4 slices).  When the
+*consumer* is also channel-parallel (the paper's "subsequent CPU and GPU
+operations read the shared output directly"), `gather=False` skips the
+all-gather entirely and the result stays group-local.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+COEXEC_AXIS = "coexec"
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """Uneven output-channel split across two device groups."""
+
+    c_out: int
+    c_fast: int                  # channels owned by group 0
+    align: int = 8               # channel alignment granularity
+
+    @property
+    def c_slow(self) -> int:
+        return self.c_out - self.c_fast
+
+    @property
+    def c_pad(self) -> int:
+        """Uniform local width (SPMD): max of the two shares, aligned."""
+        a = self.align
+        return -(-max(self.c_fast, self.c_slow) // a) * a
+
+
+def throughput_split(c_out: int, fast_share: float, align: int = 8) -> SplitPlan:
+    """Balance channels proportionally to group throughputs (the closed-form
+    optimum of the paper's objective for linear cost models)."""
+    c_fast = int(round(c_out * fast_share / align)) * align
+    c_fast = min(max(c_fast, 0), c_out)
+    return SplitPlan(c_out=c_out, c_fast=c_fast, align=align)
+
+
+def pack_weights(w: jax.Array, plan: SplitPlan) -> jax.Array:
+    """(C_in, C_out) -> (2, C_in, c_pad): per-group padded weight slices."""
+    c_in = w.shape[0]
+    wf = jnp.zeros((c_in, plan.c_pad), w.dtype).at[:, :plan.c_fast].set(
+        w[:, :plan.c_fast])
+    ws = jnp.zeros((c_in, plan.c_pad), w.dtype).at[:, :plan.c_slow].set(
+        w[:, plan.c_fast:])
+    return jnp.stack([wf, ws])
+
+
+def coexec_mesh(devices=None) -> Mesh:
+    """A two-group mesh along the co-execution axis."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices) - len(devices) % 2
+    arr = np.array(devices[:n]).reshape(2, n // 2)
+    return Mesh(arr, (COEXEC_AXIS, "lane"))
+
+
+def coexec_matmul(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
+                  mesh: Mesh, *, gather: bool = True) -> jax.Array:
+    """Channel-split matmul: each group computes its slice of X @ W.
+
+    x: (L, C_in) replicated; packed_w: (2, C_in, c_pad) sharded on group.
+    Returns (L, C_out) if gather else the group-local (2, L, c_pad) stack.
+    """
+
+    def local(x_l, w_l):
+        # w_l: (1, C_in, c_pad) — this group's slice
+        return (x_l @ w_l[0])[None]          # (1, L, c_pad)
+
+    y = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(COEXEC_AXIS, None, "lane")),
+        out_specs=P(COEXEC_AXIS, None, "lane"),
+    )(x, packed_w)                            # (2, L, c_pad) global
+
+    if not gather:
+        return y
+    # materialize the combined output — the paper's synchronization point
+    return jnp.concatenate([y[0, :, :plan.c_fast], y[1, :, :plan.c_slow]],
+                           axis=-1)
+
+
+def coexec_linear_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for tests: plain X @ W."""
+    return x @ w

@@ -1,0 +1,117 @@
+"""Output-channel workload partitioning (paper Section 2).
+
+Solves   min_{c1+c2=C_out}  T_overhead(c1,c2) + max(T_CPU(c1), T_GPU(c2))
+
+over a channel grid, where the latency terms come either from trained
+predictors (the deployable path — "3-4 ms per operation, offline") or from
+noisy measurements (the grid-search oracle the paper uses as its upper
+bound, Table 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.predictor.train import LatencyPredictor, measure_ops
+from repro.core.simulator.measure import measure_latency_us
+from repro.core.sync import SyncMechanism, sync_overhead_us
+from repro.core.types import Op
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionDecision:
+    op: Op
+    c_cpu: int
+    c_gpu: int
+    pred_cpu_us: float
+    pred_gpu_us: float
+    pred_total_us: float
+
+    @property
+    def exclusive(self) -> bool:
+        return self.c_cpu == 0 or self.c_gpu == 0
+
+
+def _candidate_splits(c_out: int, step: int) -> np.ndarray:
+    cands = np.arange(0, c_out + 1, step)
+    if cands[-1] != c_out:
+        cands = np.append(cands, c_out)
+    return cands
+
+
+def optimal_partition(op: Op, cpu_pred: LatencyPredictor,
+                      gpu_pred: LatencyPredictor, *,
+                      mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                      step: int = 8) -> PartitionDecision:
+    """Predictor-driven partitioning (the paper's deployable method)."""
+    device = gpu_pred.device
+    overhead = sync_overhead_us(device, mechanism)
+    c_gpu = _candidate_splits(op.C_out, step)
+    c_cpu = op.C_out - c_gpu
+
+    gpu_ops = [op.with_cout(int(c)) for c in c_gpu]
+    cpu_ops = [op.with_cout(int(c)) for c in c_cpu]
+    t_gpu = np.where(c_gpu > 0, gpu_pred.predict(gpu_ops), 0.0)
+    t_cpu = np.where(c_cpu > 0, cpu_pred.predict(cpu_ops), 0.0)
+
+    coexec = (c_gpu > 0) & (c_cpu > 0)
+    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
+    i = int(np.argmin(total))
+    return PartitionDecision(op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
+                             pred_cpu_us=float(t_cpu[i]),
+                             pred_gpu_us=float(t_gpu[i]),
+                             pred_total_us=float(total[i]))
+
+
+def grid_search_partition(op: Op, device: str, threads: int, *,
+                          mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                          step: int = 8, seed: int = 0) -> PartitionDecision:
+    """Measurement-driven exhaustive search (the paper's oracle baseline;
+    step 8 matches Section 5.3)."""
+    overhead = sync_overhead_us(device, mechanism)
+    backend_cpu = f"cpu{threads}"
+    c_gpu = _candidate_splits(op.C_out, step)
+    c_cpu = op.C_out - c_gpu
+
+    t_gpu = np.array([measure_latency_us(op.with_cout(int(c)), device, "gpu",
+                                         seed=seed) if c else 0.0
+                      for c in c_gpu])
+    t_cpu = np.array([measure_latency_us(op.with_cout(int(c)), device,
+                                         backend_cpu, seed=seed) if c else 0.0
+                      for c in c_cpu])
+    coexec = (c_gpu > 0) & (c_cpu > 0)
+    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
+    i = int(np.argmin(total))
+    return PartitionDecision(op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
+                             pred_cpu_us=float(t_cpu[i]),
+                             pred_gpu_us=float(t_gpu[i]),
+                             pred_total_us=float(total[i]))
+
+
+def realized_latency_us(decision: PartitionDecision, device: str,
+                        threads: int, *,
+                        mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                        seed: int = 1) -> float:
+    """Measured co-execution latency of a decision (fresh measurement seed,
+    so predictor-driven decisions are scored on unseen noise)."""
+    op = decision.op
+    t_gpu = measure_latency_us(op.with_cout(decision.c_gpu), device, "gpu",
+                               seed=seed) if decision.c_gpu else 0.0
+    t_cpu = measure_latency_us(op.with_cout(decision.c_cpu), device,
+                               f"cpu{threads}", seed=seed) \
+        if decision.c_cpu else 0.0
+    overhead = 0.0 if decision.exclusive \
+        else sync_overhead_us(device, mechanism)
+    return max(t_cpu, t_gpu) + overhead
+
+
+def speedup_vs_gpu(decision: PartitionDecision, device: str, threads: int, *,
+                   mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                   seed: int = 1) -> float:
+    """Paper's metric: speedup of co-execution over GPU-only execution."""
+    gpu_only = measure_latency_us(decision.op, device, "gpu", seed=seed)
+    co = realized_latency_us(decision, device, threads, mechanism=mechanism,
+                             seed=seed)
+    return gpu_only / co

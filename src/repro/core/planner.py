@@ -1,0 +1,96 @@
+"""End-to-end model partition planning (paper Section 5.4).
+
+Runs the per-operation partitioner over a whole network graph (offline, as
+"part of the compilation process"), then evaluates:
+
+  * baseline        — every op on the GPU;
+  * individual ops  — sum of each op's co-execution latency in isolation;
+  * end-to-end      — co-execution schedule including inter-layer effects:
+    pooling stays on the GPU (free of sync overhead), and a boundary cost is
+    charged when consecutive layers change their channel split, because each
+    side then consumes activations the *other* side produced (extra
+    cache-coherent traffic through the shared memory) — this is the paper's
+    observed "memory access overhead between layers" that makes end-to-end
+    speedups slightly lower than per-op speedups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.networks import Unit
+from repro.core.partitioner import (PartitionDecision, optimal_partition,
+                                    realized_latency_us)
+from repro.core.predictor.train import LatencyPredictor
+from repro.core.simulator.devices import DEVICES
+from repro.core.simulator.measure import measure_latency_us
+from repro.core.sync import SyncMechanism
+
+
+@dataclasses.dataclass
+class PlanReport:
+    device: str
+    threads: int
+    baseline_us: float          # all-GPU
+    individual_us: float        # sum of isolated co-exec latencies
+    end_to_end_us: float        # schedule incl. boundary costs
+    decisions: List[PartitionDecision]
+
+    @property
+    def individual_speedup(self) -> float:
+        return self.baseline_us / self.individual_us
+
+    @property
+    def end_to_end_speedup(self) -> float:
+        return self.baseline_us / self.end_to_end_us
+
+
+def _pool_latency_us(device: str) -> float:
+    # pooling is bandwidth-trivial; charge one dispatch (paper: negligible)
+    return DEVICES[device].gpu_dispatch_us * 0.6
+
+
+def plan_network(units: Sequence[Unit], cpu_pred: LatencyPredictor,
+                 gpu_pred: LatencyPredictor, *, threads: int,
+                 mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                 seed: int = 1) -> PlanReport:
+    device = gpu_pred.device
+    dev = DEVICES[device]
+
+    baseline = 0.0
+    individual = 0.0
+    e2e = 0.0
+    decisions: List[PartitionDecision] = []
+    prev_split_frac = 0.0       # fraction of channels on CPU in previous op
+
+    for kind, payload in units:
+        if kind == "pool":
+            t = _pool_latency_us(device)
+            baseline += t
+            individual += t
+            e2e += t
+            prev_split_frac = 0.0     # pooling runs wholly on GPU
+            continue
+        op = payload
+        gpu_only = measure_latency_us(op, device, "gpu", seed=seed)
+        baseline += gpu_only
+
+        dec = optimal_partition(op, cpu_pred, gpu_pred, mechanism=mechanism)
+        decisions.append(dec)
+        t_co = realized_latency_us(dec, device, threads, mechanism=mechanism,
+                                   seed=seed)
+        individual += t_co
+
+        split_frac = dec.c_cpu / max(1, op.C_out)
+        # boundary traffic: activations crossing the CPU/GPU ownership
+        # boundary between consecutive layers move through shared memory.
+        crossing = abs(split_frac - prev_split_frac) * op.input_bytes
+        boundary_us = crossing / (dev.cpu_mem_gbps * 1e3)
+        e2e += t_co + boundary_us
+        prev_split_frac = split_frac
+
+    return PlanReport(device=device, threads=threads, baseline_us=baseline,
+                      individual_us=individual, end_to_end_us=e2e,
+                      decisions=decisions)

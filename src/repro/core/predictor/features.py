@@ -1,0 +1,68 @@
+"""Feature construction for the latency predictors.
+
+Two regimes, mirroring the paper's ablation (Tab. 4):
+
+  * **black-box** — operation configuration only (shapes, FLOPs, bytes):
+    what prior work [9,13,15,22] uses; captures trends, misses spikes.
+  * **white-box (augmented)** — adds kernel *dispatch* features recovered
+    from the delegate heuristics (Section 3.2): workgroup shape/size/count,
+    grid dims, wave count, wave quantization waste, occupancy, padded FLOPs.
+    White-box predictors are additionally trained *per kernel
+    implementation* (linear / conv_generic / conv_constant / winograd).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.simulator.devices import DEVICES
+from repro.core.simulator.gpu_model import dispatch_for
+from repro.core.types import ConvOp, LinearOp, Op
+
+BLACKBOX_LINEAR = ["L", "C_in", "C_out", "log_flops", "log_weight_bytes"]
+BLACKBOX_CONV = ["H_in", "W_in", "C_in", "C_out", "K", "S",
+                 "log_flops", "log_weight_bytes"]
+DISPATCH_FEATURES = ["wg_x", "wg_y", "wg_size", "grid_x", "grid_y",
+                     "wg_count", "waves", "wave_quant", "occupancy",
+                     "log_padded_flops"]
+
+
+def _base_features(op: Op) -> List[float]:
+    if isinstance(op, LinearOp):
+        return [op.L, op.C_in, op.C_out,
+                np.log(max(op.flops, 1)), np.log(max(op.weight_bytes, 1))]
+    return [op.H_in, op.W_in, op.C_in, op.C_out, op.K, op.S,
+            np.log(max(op.flops, 1)), np.log(max(op.weight_bytes, 1))]
+
+
+def blackbox_features(ops: Sequence[Op]) -> np.ndarray:
+    return np.array([_base_features(op) for op in ops], dtype=np.float64)
+
+
+def _dispatch_features(op: Op, device: str) -> List[float]:
+    from repro.core.simulator.gpu_model import _OCCUPANCY_THREADS_PER_CU
+    dev = DEVICES[device]
+    d = dispatch_for(op, dev)
+    slots = dev.gpu_compute_units * max(1, int(512 // max(1, d.wg_size)))
+    waves = -(-d.wg_count // slots)
+    quant = waves * slots / max(1, d.wg_count)
+    occ = min(1.0, d.total_threads /
+              (_OCCUPANCY_THREADS_PER_CU * dev.gpu_compute_units))
+    return [d.wg_x, d.wg_y, d.wg_size, d.grid_x, d.grid_y, d.wg_count,
+            waves, quant, occ, np.log(max(d.padded_flops, 1))]
+
+
+def whitebox_features(ops: Sequence[Op], device: str) -> np.ndarray:
+    return np.array(
+        [_base_features(op) + _dispatch_features(op, device) for op in ops],
+        dtype=np.float64)
+
+
+def kernel_of(op: Op, device: str) -> str:
+    return dispatch_for(op, DEVICES[device]).kernel
+
+
+def feature_names(ops_kind: str, whitebox: bool) -> List[str]:
+    base = BLACKBOX_LINEAR if ops_kind == "linear" else BLACKBOX_CONV
+    return base + DISPATCH_FEATURES if whitebox else list(base)

@@ -1,0 +1,160 @@
+"""Training of latency predictors (paper Sections 3.2, 5.2).
+
+A `LatencyPredictor` maps operations to predicted latency (microseconds) for
+one (device, backend) pair.  GPU white-box predictors are split per kernel
+implementation and fed dispatch-augmented features; black-box predictors see
+only the operation configuration (the ablation baseline).
+
+Targets are log-latencies: squared loss on logs optimizes relative error,
+which is what MAPE (Table 1) scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.predictor.features import (blackbox_features, kernel_of,
+                                           whitebox_features)
+from repro.core.predictor.gbdt import GBDTParams, GBDTRegressor
+from repro.core.simulator.measure import measure_latency_us
+from repro.core.types import Op
+
+
+@dataclasses.dataclass
+class LatencyPredictor:
+    device: str
+    backend: str                    # 'gpu' | 'cpu1' | 'cpu2' | 'cpu3'
+    whitebox: bool
+    models: Dict[str, GBDTRegressor]   # kernel -> model ('*' if not split)
+
+    def predict(self, ops: Sequence[Op]) -> np.ndarray:
+        ops = list(ops)
+        out = np.empty(len(ops))
+        if not self.whitebox or self.backend != "gpu":
+            feats = (whitebox_features(ops, self.device)
+                     if self.whitebox and self.backend == "gpu"
+                     else blackbox_features(ops))
+            model = self.models["*"]
+            out[:] = np.exp(model.predict(feats))
+            return out
+        # white-box GPU: route each op to its kernel's model
+        kernels = np.array([kernel_of(op, self.device) for op in ops])
+        feats = whitebox_features(ops, self.device)
+        for kern in np.unique(kernels):
+            sel = kernels == kern
+            model = self.models.get(kern) or self.models["*"]
+            out[sel] = np.exp(model.predict(feats[sel]))
+        return out
+
+    def save(self, path: Path) -> None:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with open(path, "wb") as f:
+            pickle.dump(self, f)
+
+    @staticmethod
+    def load(path: Path) -> "LatencyPredictor":
+        with open(path, "rb") as f:
+            return pickle.load(f)
+
+
+def measure_ops(ops: Sequence[Op], device: str, backend: str,
+                seed: int = 0) -> np.ndarray:
+    return np.array([measure_latency_us(op, device, backend, seed=seed)
+                     for op in ops])
+
+
+def train_predictor(ops: Sequence[Op], device: str, backend: str, *,
+                    whitebox: bool = True,
+                    y_us: Optional[np.ndarray] = None,
+                    params: Optional[GBDTParams] = None,
+                    hpo_trials: int = 0, seed: int = 0) -> LatencyPredictor:
+    """Fit a predictor on measured latencies of `ops`.
+
+    hpo_trials > 0 runs an Optuna-style random search with a held-out
+    validation split (20%), mirroring Section 5.2.
+    """
+    ops = list(ops)
+    y = measure_ops(ops, device, backend, seed=seed) if y_us is None \
+        else np.asarray(y_us)
+    logy = np.log(np.maximum(y, 1e-3))
+
+    gpu_wb = whitebox and backend == "gpu"
+    X = whitebox_features(ops, device) if gpu_wb else blackbox_features(ops)
+
+    def fit_group(Xg, yg, prm):
+        return GBDTRegressor(prm, seed=seed).fit(Xg, yg)
+
+    def choose_params(Xg, yg) -> GBDTParams:
+        if params is not None:
+            return params
+        if hpo_trials <= 0:
+            return GBDTParams()
+        rng = np.random.default_rng(seed + 17)
+        n = len(yg)
+        idx = rng.permutation(n)
+        cut = max(1, int(0.8 * n))
+        tr, va = idx[:cut], idx[cut:]
+        best, best_err = GBDTParams(), np.inf
+        for _ in range(hpo_trials):
+            cand = GBDTParams.random(rng)
+            m = GBDTRegressor(cand, seed=seed).fit(Xg[tr], yg[tr])
+            err = float(np.mean(np.abs(np.exp(m.predict(Xg[va]))
+                                       - np.exp(yg[va]))
+                                / np.exp(yg[va])))
+            if err < best_err:
+                best, best_err = cand, err
+        return best
+
+    models: Dict[str, GBDTRegressor] = {}
+    if gpu_wb:
+        kernels = np.array([kernel_of(op, device) for op in ops])
+        for kern in np.unique(kernels):
+            sel = kernels == kern
+            if sel.sum() < 30:       # too few samples: fall through to '*'
+                continue
+            prm = choose_params(X[sel], logy[sel])
+            models[kern] = fit_group(X[sel], logy[sel], prm)
+        # global fallback model over all samples
+        prm = choose_params(X, logy)
+        models["*"] = fit_group(X, logy, prm)
+    else:
+        prm = choose_params(X, logy)
+        models["*"] = fit_group(X, logy, prm)
+
+    return LatencyPredictor(device=device, backend=backend,
+                            whitebox=gpu_wb, models=models)
+
+
+def mape(pred_us: np.ndarray, true_us: np.ndarray) -> float:
+    true_us = np.asarray(true_us)
+    return float(np.mean(np.abs(pred_us - true_us) / np.maximum(true_us,
+                                                                1e-9)))
+
+
+@dataclasses.dataclass
+class MuxPredictor:
+    """Routes linear ops to one predictor and conv ops to another; the
+    end-to-end planner spans both op kinds."""
+
+    linear: LatencyPredictor
+    conv: LatencyPredictor
+
+    @property
+    def device(self) -> str:
+        return self.linear.device
+
+    def predict(self, ops: Sequence[Op]) -> np.ndarray:
+        from repro.core.types import LinearOp
+        ops = list(ops)
+        out = np.empty(len(ops))
+        il = [i for i, o in enumerate(ops) if isinstance(o, LinearOp)]
+        ic = [i for i, o in enumerate(ops) if not isinstance(o, LinearOp)]
+        if il:
+            out[il] = self.linear.predict([ops[i] for i in il])
+        if ic:
+            out[ic] = self.conv.predict([ops[i] for i in ic])
+        return out

@@ -1,0 +1,50 @@
+"""Measurement interface over the analytic device models.
+
+`measure(...)` is the only way the rest of the system observes "hardware":
+it adds reproducible log-normal measurement noise (thermal/scheduling jitter
+survives even the paper's cooling-fan protocol, Section 5.1) so that the
+trained predictors never see the analytic oracle exactly — the Table 1 MAPE
+numbers are only meaningful against noisy observations.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.simulator.cpu_model import cpu_latency_us
+from repro.core.simulator.devices import DEVICES, DeviceSpec
+from repro.core.simulator.gpu_model import dispatch_for, gpu_latency_us
+from repro.core.types import ConvOp, LinearOp, Op
+
+_NOISE_SIGMA = 0.030
+
+
+def _stable_seed(*parts) -> int:
+    h = hashlib.blake2b(repr(parts).encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "little")
+
+
+def true_latency_us(op: Op, device: str, backend: str) -> float:
+    """Noise-free latency (the simulator oracle). backend: 'gpu' | 'cpuN'."""
+    dev = DEVICES[device]
+    if op.C_out == 0:
+        return 0.0
+    if backend == "gpu":
+        return gpu_latency_us(op, dev)
+    if backend.startswith("cpu"):
+        return cpu_latency_us(op, dev, int(backend[3:] or 1))
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def measure_latency_us(op: Op, device: str, backend: str,
+                       repeats: int = 5, seed: int = 0) -> float:
+    """Noisy measurement: median of `repeats` jittered observations."""
+    base = true_latency_us(op, device, backend)
+    if base == 0.0:
+        return 0.0
+    rng = np.random.default_rng(_stable_seed(device, backend, op, seed))
+    obs = base * np.exp(rng.normal(0.0, _NOISE_SIGMA, size=repeats))
+    return float(np.median(obs))

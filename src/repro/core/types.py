@@ -1,0 +1,85 @@
+"""Operation descriptions for the paper's workload domain.
+
+The paper partitions *individual* linear and convolutional operations along
+their output channels (Section 2).  These dataclasses are the common currency
+between the hardware simulator, the latency predictors, the partitioner and
+the end-to-end planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearOp:
+    """Y = X @ W with X: (L, C_in), W: (C_in, C_out)."""
+
+    L: int
+    C_in: int
+    C_out: int
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.L * self.C_in * self.C_out
+
+    @property
+    def input_bytes(self) -> int:
+        return 4 * self.L * self.C_in
+
+    @property
+    def weight_bytes(self) -> int:
+        return 4 * self.C_in * self.C_out
+
+    @property
+    def output_bytes(self) -> int:
+        return 4 * self.L * self.C_out
+
+    def with_cout(self, c_out: int) -> "LinearOp":
+        return dataclasses.replace(self, C_out=c_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvOp:
+    """2D convolution, NHWC, square K x K filter, stride S, SAME padding."""
+
+    H_in: int
+    W_in: int
+    C_in: int
+    C_out: int
+    K: int = 3
+    S: int = 1
+
+    @property
+    def H_out(self) -> int:
+        return max(1, self.H_in // self.S)
+
+    @property
+    def W_out(self) -> int:
+        return max(1, self.W_in // self.S)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.H_out * self.W_out * self.C_out * self.K * self.K * self.C_in
+
+    @property
+    def input_bytes(self) -> int:
+        return 4 * self.H_in * self.W_in * self.C_in
+
+    @property
+    def weight_bytes(self) -> int:
+        return 4 * self.K * self.K * self.C_in * self.C_out
+
+    @property
+    def output_bytes(self) -> int:
+        return 4 * self.H_out * self.W_out * self.C_out
+
+    def with_cout(self, c_out: int) -> "ConvOp":
+        return dataclasses.replace(self, C_out=c_out)
+
+
+Op = Union[LinearOp, ConvOp]
+
+
+def op_with_cout(op: Op, c_out: int) -> Op:
+    return op.with_cout(c_out)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute paths.
+
+  split_matmul/      channel-partitioned matmul (co-execution primitive)
+  winograd_conv/     F(2x2,3x3) convolution (the paper's kernel-switch case)
+  decode_attention/  flash-style 1-token decode vs a long KV cache
+  ssd_chunk/         chunked Mamba2 SSD scan, state resident in VMEM
+
+Each package has <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle); tests validate interpret=True against
+the oracle over shape/dtype sweeps.
+"""

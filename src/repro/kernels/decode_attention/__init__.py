@@ -1,0 +1,5 @@
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_op", "decode_attention_ref"]

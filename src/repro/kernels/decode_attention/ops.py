@@ -1,0 +1,25 @@
+"""Jitted batched wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bs", "interpret",
+                                             "use_kernel"))
+def decode_attention_op(q, k, v, pos, *, window: int = 0, bs: int = 512,
+                        interpret: bool = False, use_kernel: bool = True):
+    """Batched decode attention.
+
+    q: (B, H, hd); k/v: (B, S, kv, hd); pos scalar (shared write position).
+    """
+    if not use_kernel:
+        fn = functools.partial(decode_attention_ref, window=window)
+        return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, pos))(q, k, v)
+    fn = functools.partial(decode_attention, window=window, bs=bs,
+                           interpret=interpret)
+    return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, pos))(q, k, v)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for decode attention (GQA, causal, optional window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos, *, window: int = 0) -> jax.Array:
+    """q: (H, hd); k/v: (S, kv, hd); pos scalar. Returns (H, hd)."""
+    h, hd = q.shape
+    s, kv, _ = k.shape
+    g = h // kv
+    qg = q.reshape(kv, g, hd).astype(jnp.float32)
+    kf = jnp.swapaxes(k, 0, 1).astype(jnp.float32)      # (kv, S, hd)
+    vf = jnp.swapaxes(v, 0, 1).astype(jnp.float32)
+    scores = jnp.einsum("hgd,hsd->hgs", qg, kf) / np.sqrt(hd)
+    k_pos = jnp.arange(s)
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= k_pos > pos - window
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hgs,hsd->hgd", probs, vf)
+    return out.reshape(h, hd).astype(q.dtype)

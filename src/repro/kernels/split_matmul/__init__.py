@@ -1,0 +1,5 @@
+from repro.kernels.split_matmul.ops import split_matmul_op
+from repro.kernels.split_matmul.ref import split_matmul_ref
+from repro.kernels.split_matmul.split_matmul import split_matmul
+
+__all__ = ["split_matmul", "split_matmul_op", "split_matmul_ref"]

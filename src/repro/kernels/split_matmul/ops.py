@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the split_matmul kernel.
+
+On a real TPU this runs the Pallas kernel natively; in this CPU container
+`interpret=True` executes the kernel body in Python for correctness
+validation (tests/test_kernels.py sweeps shapes/dtypes against ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.split_matmul.split_matmul import split_matmul
+from repro.kernels.split_matmul.ref import split_matmul_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("c0", "width", "bm", "bn", "bk",
+                                    "interpret", "use_kernel"))
+def split_matmul_op(x, w, c0: int, width: int, *, bm: int = 128,
+                    bn: int = 128, bk: int = 512, interpret: bool = False,
+                    use_kernel: bool = True):
+    if not use_kernel:
+        return split_matmul_ref(x, w, c0, width)
+    return split_matmul(x, w, c0, width, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the split_matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_matmul_ref(x: jax.Array, w: jax.Array, c0: int,
+                     width: int) -> jax.Array:
+    return x @ jax.lax.slice(w, (0, c0), (w.shape[0], c0 + width))

@@ -1,0 +1,5 @@
+from repro.kernels.ssd_chunk.ops import ssd_chunk_op
+from repro.kernels.ssd_chunk.ref import ssd_scan_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_scan
+
+__all__ = ["ssd_chunk_op", "ssd_scan_ref", "ssd_chunk_scan"]

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the chunked-SSD Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_chunk.ref import ssd_scan_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "use_kernel"))
+def ssd_chunk_op(x, b, c, dt, a, state0, *, chunk: int = 256,
+                 interpret: bool = False, use_kernel: bool = True):
+    if not use_kernel:
+        return ssd_scan_ref(x, b, c, dt, a, state0)
+    return ssd_chunk_scan(x, b, c, dt, a, state0, chunk=chunk,
+                          interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the chunked SSD kernel: the per-timestep scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, b, c, dt, a, state0):
+    """x: (B,T,H,hd); b/c: (B,T,N); dt: (B,T,H); a: (H,); state0:
+    (B,H,hd,N) -> (final_state, y)."""
+    decay = jnp.exp(dt * a)
+
+    def step(s, inp):
+        x_t, b_t, c_t, dec_t, dt_t = inp
+        upd = dt_t[..., None, None] * (x_t[..., :, None]
+                                       * b_t[:, None, None, :])
+        s = dec_t[..., None, None] * s + upd
+        return s, jnp.einsum("bhdn,bn->bhd", s, c_t)
+
+    seq = (x.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1),
+           decay.swapaxes(0, 1), dt.swapaxes(0, 1))
+    sf, ys = jax.lax.scan(step, state0, seq)
+    return sf, ys.swapaxes(0, 1)

@@ -1,0 +1,6 @@
+from repro.kernels.winograd_conv.ops import conv2d_op
+from repro.kernels.winograd_conv.ref import conv2d_ref
+from repro.kernels.winograd_conv.winograd_conv import (hadamard_matmul,
+                                                       winograd_conv2d)
+
+__all__ = ["conv2d_op", "conv2d_ref", "hadamard_matmul", "winograd_conv2d"]

@@ -1,0 +1,24 @@
+"""Jitted wrapper for the Winograd conv kernel with TFLite-style selection.
+
+`conv2d_op` mirrors the paper's kernel-selection logic (Section 3.2): 3x3
+stride-1 convs with enough channels take the Winograd path; everything else
+falls back to the direct reference convolution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.winograd_conv.ref import conv2d_ref
+from repro.kernels.winograd_conv.winograd_conv import winograd_conv2d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def conv2d_op(x, w, *, interpret: bool = False, use_kernel: bool = True):
+    kh, kw, cin, cout = w.shape
+    winograd_eligible = (kh == 3 and kw == 3 and cout >= 128
+                         and x.shape[1] * x.shape[2] >= 1024 and cin >= 32)
+    if use_kernel and winograd_eligible:
+        return winograd_conv2d(x, w, interpret=interpret)
+    return conv2d_ref(x, w)

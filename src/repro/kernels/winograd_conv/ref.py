@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: direct 3x3 SAME convolution via lax.conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,H,W,Cin); w: (3,3,Cin,Cout) -> (B,H,W,Cout), stride 1, SAME."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)

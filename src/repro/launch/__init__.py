@@ -1,0 +1,6 @@
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS for 512 host devices, which must never leak into tests/benches.
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.shapes import INPUT_SHAPES, InputShape, shape_applicable
+__all__ = ["make_host_mesh", "make_production_mesh", "INPUT_SHAPES",
+           "InputShape", "shape_applicable"]

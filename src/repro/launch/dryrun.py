@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with NO device allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_405b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per combination this prints compiled.memory_analysis() (proves it fits) and
+compiled.cost_analysis() (FLOPs/bytes for the roofline), parses collective
+bytes from the post-SPMD HLO, and appends a JSON record to
+reports/dryrun/<arch>_<shape>_<mesh>.json for EXPERIMENTS.md.
+
+NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
+the device count at first init.  Do not import this module from processes
+that need the real single-device CPU platform.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.shapes import INPUT_SHAPES, shape_applicable
+from repro.launch.steps import (input_specs, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.models import ARCH_IDS, build
+from repro.roofline.analysis import build_report
+from repro.sharding.ctx import activation_mesh
+from repro.sharding.rules import (batch_shardings, cache_shardings,
+                                  param_shardings, replicated)
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              verbose: bool = True, extra_tag: str = "",
+              test_mesh: bool = False):
+    """Lower+compile one (arch, shape, mesh); returns the roofline record."""
+    cfg, model = build(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if test_mesh:
+        mesh_name = "2x2x2" if multi_pod else "2x4"
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    if skip is not None:
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {skip}")
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": skip}
+        REPORT_DIR.mkdir(parents=True, exist_ok=True)
+        with open(REPORT_DIR / f"{arch}_{shape_name}_{mesh_name}.json",
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_test_mesh(multi_pod=multi_pod) if test_mesh \
+        else make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    specs = input_specs(cfg, model, shape)
+    t0 = time.time()
+
+    with mesh, activation_mesh(mesh):
+        p_sh = param_shardings(specs["params"], mesh)
+        if shape.kind == "train":
+            step = make_train_step(model)
+            opt_sh = jax.tree.map(lambda _: replicated(mesh),
+                                  specs["opt_state"])
+            opt_sh = opt_sh._replace(mu=p_sh, nu=p_sh)
+            b_sh = batch_shardings(specs["batch"], mesh)
+            lowered = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh)) \
+                .lower(specs["params"], specs["opt_state"], specs["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, cfg)
+            c_sh = cache_shardings(specs["cache"], mesh,
+                                   batch=shape.global_batch)
+            t_sh = batch_shardings({"t": specs["tokens"]}, mesh)["t"]
+            args = [specs["params"], specs["tokens"], specs["cache"]]
+            shardings = [p_sh, t_sh, c_sh]
+            if cfg.is_encoder_decoder:
+                f_sh = batch_shardings({"f": specs["frames"]}, mesh)["f"]
+                args.append(specs["frames"])
+                shardings.append(f_sh)
+            lowered = jax.jit(step, in_shardings=tuple(shardings)) \
+                .lower(*args)
+        else:  # decode
+            step = make_decode_step(model)
+            seq_shard = shape.global_batch < mesh.shape["data"]
+            c_sh = cache_shardings(specs["cache"], mesh,
+                                   batch=shape.global_batch,
+                                   seq_shard=seq_shard)
+            t_sh = batch_shardings({"t": specs["tokens"]}, mesh)["t"]
+            lowered = jax.jit(step, in_shardings=(
+                p_sh, t_sh, c_sh, replicated(mesh))) \
+                .lower(specs["params"], specs["tokens"], specs["cache"],
+                       specs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    report = build_report(arch, shape, mesh_name, chips, cost, mem, hlo,
+                          cfg)
+    rec = report.to_dict()
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1))
+
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} @ {mesh_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops/dev={cost.get('flops', 0):.3e} "
+              f"bytes/dev={cost.get('bytes accessed', 0):.3e}")
+        print(f"  roofline: compute={report.t_compute*1e3:.2f}ms "
+              f"memory={report.t_memory*1e3:.2f}ms "
+              f"collective={report.t_collective*1e3:.2f}ms "
+              f"-> {report.bottleneck}-bound "
+              f"(useful {report.useful_flops_ratio:.2f})")
+
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = f"_{extra_tag}" if extra_tag else ""
+    out = REPORT_DIR / f"{arch}_{shape_name}_{mesh_name}{tag}.json"
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"],
+                    default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    lower_one(arch, shape, multi_pod=mp,
+                              extra_tag=args.tag)
+                except Exception as e:            # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape} "
+                          f"multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\n[dryrun] all combinations lowered and compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Serving launcher: batched requests through the ServingEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3_12b --reduced \
+        --requests 8 --max-new 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models import ARCH_IDS, build_model, get_config
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(4, 17)).astype(np.int32)
+        frames = None
+        if cfg.is_encoder_decoder:
+            frames = rng.normal(size=(cfg.encoder_seq, cfg.d_model)
+                                ).astype(np.float32) * 0.02
+        reqs.append(Request(rid=rid, prompt=prompt,
+                            max_new_tokens=args.max_new,
+                            temperature=args.temperature, frames=frames))
+
+    engine = ServingEngine(cfg, model, params, max_batch=args.max_batch,
+                           max_len=64 + args.max_new)
+    t0 = time.time()
+    completions = engine.run(reqs)
+    dt = time.time() - t0
+    total_tokens = sum(len(c.tokens) for c in completions)
+    for c in completions[:4]:
+        print(f"req {c.rid}: {c.tokens}")
+    print(f"{len(completions)} completions, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s on host CPU)")
+
+
+if __name__ == "__main__":
+    main()

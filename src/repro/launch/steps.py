@@ -1,0 +1,92 @@
+"""Jittable train / prefill / decode steps + ShapeDtypeStruct input specs.
+
+`input_specs(...)` produces weak-type-correct ShapeDtypeStruct stand-ins
+for every model input at a given production shape — no device allocation —
+which is what dryrun.py lowers against.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import make_batch
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.launch.shapes import InputShape
+
+
+# ------------------------------------------------------------------- train
+def make_train_step(model, opt_cfg: AdamWConfig = AdamWConfig()):
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+    return train_step
+
+
+# ------------------------------------------------------------------- serve
+def make_prefill_step(model, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        def prefill_step(params, tokens, cache, frames):
+            return model.prefill(params, tokens, cache, frames)
+    else:
+        def prefill_step(params, tokens, cache):
+            return model.prefill(params, tokens, cache)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+    return decode_step
+
+
+# ------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    specs = {"tokens": _sds((batch, seq), jnp.int32),
+             "labels": _sds((batch, seq), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                               jnp.float32)
+    return specs
+
+
+def params_specs(cfg: ModelConfig, model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_specs(params_shape):
+    return jax.eval_shape(init_adamw, params_shape)
+
+
+def cache_specs(cfg: ModelConfig, model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, model, shape: InputShape
+                ) -> Dict[str, Any]:
+    """All abstract inputs needed to lower the step for this shape."""
+    b, t = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {
+        "params": params_specs(cfg, model),
+    }
+    if shape.kind == "train":
+        out["opt_state"] = opt_specs(out["params"])
+        out["batch"] = batch_specs(cfg, b, t)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, t), jnp.int32)
+        out["cache"] = cache_specs(cfg, model, b, t)
+        if cfg.is_encoder_decoder:
+            out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                 jnp.float32)
+    else:  # decode
+        out["tokens"] = _sds((b, 1), jnp.int32)
+        out["cache"] = cache_specs(cfg, model, b, t)
+        out["pos"] = _sds((), jnp.int32)
+    return out

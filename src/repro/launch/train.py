@@ -1,0 +1,87 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch rwkv6_1b6 \
+        --reduced --steps 50 --batch 8 --seq 128
+
+On the CPU container use --reduced (the tiny same-family variant); on real
+hardware the full config trains on the production mesh with the same code
+path (pjit over make_production_mesh()).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.data import DataConfig, SyntheticTokenStream, make_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import ARCH_IDS, build_model, get_config
+from repro.optim import AdamWConfig, init_adamw
+from repro.sharding.ctx import activation_mesh
+from repro.sharding.rules import batch_shardings, param_shardings, replicated
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_production_mesh() if args.production_mesh \
+        else make_host_mesh()
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(1, args.steps // 10))
+    step_fn = make_train_step(model, opt_cfg)
+
+    with mesh, activation_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        p_sh = param_shardings(params, mesh)
+        params = jax.device_put(params, p_sh)
+        opt_state = init_adamw(params)
+        train = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        stream = iter(SyntheticTokenStream(
+            cfg.vocab_size, DataConfig(args.batch, args.seq, seed=0)))
+        losses = []
+        t0 = time.time()
+        for step in range(args.steps):
+            raw = next(stream)
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            if cfg.is_encoder_decoder:
+                batch["frames"] = jnp.asarray(make_batch(
+                    cfg, args.batch, args.seq, seed=step)["frames"])
+            params, opt_state, loss = train(params, opt_state, batch)
+            losses.append(float(loss))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"({dt/(step+1):.2f}s/step)")
+        if args.checkpoint_dir:
+            out = save_checkpoint(args.checkpoint_dir, args.steps,
+                                  {"params": params})
+            print(f"checkpoint -> {out}")
+        print(f"final loss {np.mean(losses[-5:]):.4f} "
+              f"(initial {np.mean(losses[:5]):.4f})")
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]), \
+            "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import (ALIASES, ARCH_IDS, build, build_model,
+                                   get_config)
+
+__all__ = ["ModelConfig", "ALIASES", "ARCH_IDS", "build", "build_model",
+           "get_config"]

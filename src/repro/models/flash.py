@@ -1,0 +1,225 @@
+"""Memory-bounded attention via double-chunked online softmax (pure JAX).
+
+Naive (T, S) score materialization is impossible at the assigned production
+shapes (32k prefill => exabyte-scale scores for llama3-405b), so the full-
+sequence and decode attention paths switch to these flash-style routines
+above a sequence threshold:
+
+  * flash_full:   outer lax.scan over query chunks, inner lax.scan over key
+    chunks, running (max, sum, acc) per query row.  Live intermediates are
+    (bq, bk) score tiles per (batch, head) — MBs, not TBs.
+  * flash_decode: single query position against a long cache, scanned over
+    key chunks (the jnp twin of kernels/decode_attention).
+
+Causality and sliding windows are positional masks applied per tile; whole
+tiles that are fully masked still execute (uniform scan) — the cost model
+treats this as the TPU analogue of workgroup padding waste.
+
+Each query-chunk step is wrapped in jax.checkpoint so training at 4k keeps
+only O(T * D) residuals per layer instead of O(T * S) probabilities.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG_INF = -1e30
+
+
+def _tile_mask(q0, k0, bq, bk, window):
+    q_pos = q0 + jnp.arange(bq)[:, None]
+    k_pos = k0 + jnp.arange(bk)[None, :]
+    m = k_pos <= q_pos
+    if window > 0:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def flash_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               window: int = 0, bq: int = 1024, bk: int = 1024) -> jax.Array:
+    """Causal GQA attention. q: (B,T,H,hd); k/v: (B,S,KV,hd) -> (B,T,H,hd)."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(bq, t)
+    bk = min(bk, s)
+    assert t % bq == 0 and s % bk == 0, (t, bq, s, bk)
+    nq, nk = t // bq, s // bk
+    scale = float(1.0 / np.sqrt(hd))
+
+    # (nq, B, bq, KV, g, hd)
+    qc = q.reshape(b, nq, bq, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def q_step(carry, xs):
+        del carry
+        qi, q_idx = xs                               # (B,bq,KV,g,hd)
+        qi = qi.astype(jnp.float32) * scale
+
+        def k_step(state, ys):
+            m_run, l_run, acc = state
+            kj, vj, k_idx = ys                       # (B,bk,KV,hd)
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", qi,
+                                kj.astype(jnp.float32))
+            mask = _tile_mask(q_idx * bq, k_idx * bk, bq, bk, window)
+            scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+            m_new = jnp.maximum(m_run, scores.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] \
+                + jnp.einsum("bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, g, bq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, bq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(q.dtype)             # (B,KV,g,bq,hd)
+
+    _, chunks = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    # (nq, B, KV, g, bq, hd) -> (B, T, H, hd)
+    out = chunks.transpose(1, 0, 4, 2, 3, 5).reshape(b, t, h, hd)
+    return out
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos, *,
+                 window: int = 0, bk: int = 2048) -> jax.Array:
+    """One-token decode. q: (B,1,H,hd); k/v: (B,S,KV,hd) -> (B,1,H,hd)."""
+    b, _, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bk = min(bk, s)
+    assert s % bk == 0
+    nk = s // bk
+    scale = float(1.0 / np.sqrt(hd))
+    qf = q.reshape(b, kv, g, hd).astype(jnp.float32) * scale
+    kc = k.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    def k_step(state, ys):
+        m_run, l_run, acc = state
+        kj, vj, k_idx = ys
+        scores = jnp.einsum("bhgd,bkhd->bhgk", qf, kj.astype(jnp.float32))
+        k_pos = k_idx * bk + jnp.arange(bk)
+        mask = k_pos <= pos
+        if window > 0:
+            mask &= k_pos > pos - window
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+        m_new = jnp.maximum(m_run, scores.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] \
+            + jnp.einsum("bhgk,bkhd->bhgd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kv, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, hd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def flash_latent_full(q_lat: jax.Array, q_rope: jax.Array, c_kv: jax.Array,
+                      k_rope: jax.Array, scale: float, *,
+                      bq: int = 1024, bk: int = 1024
+                      ) -> jax.Array:
+    """Chunked MLA latent attention (causal).
+
+    q_lat: (B,T,H,r) absorbed queries; q_rope: (B,T,H,rd);
+    c_kv: (B,S,r); k_rope: (B,S,rd).  Returns latent context (B,T,H,r).
+    """
+    b, t, h, r = q_lat.shape
+    s = c_kv.shape[1]
+    bq = min(bq, t)
+    bk = min(bk, s)
+    assert t % bq == 0 and s % bk == 0
+    nq, nk = t // bq, s // bk
+    qlc = q_lat.reshape(b, nq, bq, h, r).transpose(1, 0, 2, 3, 4)
+    qrc = q_rope.reshape(b, nq, bq, h, -1).transpose(1, 0, 2, 3, 4)
+    ckc = c_kv.reshape(b, nk, bk, r).transpose(1, 0, 2, 3)
+    krc = k_rope.reshape(b, nk, bk, -1).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def q_step(carry, xs):
+        del carry
+        ql, qr, q_idx = xs
+        qlf = ql.astype(jnp.float32)
+        qrf = qr.astype(jnp.float32)
+
+        def k_step(state, ys):
+            m_run, l_run, acc = state
+            ck, kr, k_idx = ys
+            scores = (jnp.einsum("bqhr,bkr->bhqk", qlf,
+                                 ck.astype(jnp.float32))
+                      + jnp.einsum("bqhd,bkd->bhqk", qrf,
+                                   kr.astype(jnp.float32))) * scale
+            mask = _tile_mask(q_idx * bq, k_idx * bk, bq, bk, 0)
+            scores = jnp.where(mask[None, None], scores, _NEG_INF)
+            m_new = jnp.maximum(m_run, scores.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] \
+                + jnp.einsum("bhqk,bkr->bhqr", p, ck.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, bq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, r), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                          (ckc, krc, jnp.arange(nk)))
+        ctx = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, ctx.astype(q_lat.dtype)          # (B,H,bq,r)
+
+    _, chunks = jax.lax.scan(q_step, None, (qlc, qrc, jnp.arange(nq)))
+    return chunks.transpose(1, 0, 3, 2, 4).reshape(b, t, h, r)
+
+
+def flash_latent_decode(q_lat, q_rope, c_kv, k_rope, pos, scale: float, *,
+                        bk: int = 2048) -> jax.Array:
+    """One-token MLA decode. q_lat: (B,1,H,r); caches (B,S,*)."""
+    b, _, h, r = q_lat.shape
+    s = c_kv.shape[1]
+    bk = min(bk, s)
+    assert s % bk == 0
+    nk = s // bk
+    qlf = q_lat.reshape(b, h, r).astype(jnp.float32)
+    qrf = q_rope.reshape(b, h, -1).astype(jnp.float32)
+    ckc = c_kv.reshape(b, nk, bk, r).transpose(1, 0, 2, 3)
+    krc = k_rope.reshape(b, nk, bk, -1).transpose(1, 0, 2, 3)
+
+    def k_step(state, ys):
+        m_run, l_run, acc = state
+        ck, kr, k_idx = ys
+        scores = (jnp.einsum("bhr,bkr->bhk", qlf, ck.astype(jnp.float32))
+                  + jnp.einsum("bhd,bkd->bhk", qrf,
+                               kr.astype(jnp.float32))) * scale
+        k_pos = k_idx * bk + jnp.arange(bk)
+        scores = jnp.where((k_pos <= pos)[None, None], scores, _NEG_INF)
+        m_new = jnp.maximum(m_run, scores.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] \
+            + jnp.einsum("bhk,bkr->bhr", p, ck.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    a0 = jnp.zeros((b, h, r), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (ckc, krc, jnp.arange(nk)))
+    ctx = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return ctx.reshape(b, 1, h, r).astype(q_lat.dtype)

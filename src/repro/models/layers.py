@@ -1,0 +1,206 @@
+"""Shared neural-net layers (pure JAX, pytree params, scan-friendly).
+
+Conventions:
+  * params are plain dicts of jnp arrays; layer stacks hold them with a
+    leading (n_layers, ...) axis so the decoder can lax.scan over layers;
+  * every attention variant supports three modes: full-sequence causal
+    (train/prefill) and single-token decode against a KV cache;
+  * shapes: x (B, T, D); caches (B, S, n_kv, hd).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.ctx import batch_axes, constrain
+
+Params = Dict[str, jax.Array]
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ----------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def _causal_mask(q_len: int, k_len: int, q_offset: int = 0,
+                 window: int = 0) -> jax.Array:
+    """(q_len, k_len) boolean mask; window > 0 adds a sliding window."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(k_len)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """q: (B,T,H,hd) k/v: (B,S,Hkv,hd) grouped-query attention core."""
+    b, t, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, t, hkv, group, hd)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k) / np.sqrt(hd)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                       _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(b, t, h, hd)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int = 0          # 0 = full
+
+
+def init_attention(rng, d_model: int, spec: AttnSpec,
+                   dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(rng, 4)
+    h, kv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    s = float(1.0 / np.sqrt(d_model))
+    p = {
+        "wq": jax.random.normal(keys[0], (d_model, h * hd), dtype) * s,
+        "wk": jax.random.normal(keys[1], (d_model, kv * hd), dtype) * s,
+        "wv": jax.random.normal(keys[2], (d_model, kv * hd), dtype) * s,
+        "wo": jax.random.normal(keys[3], (h * hd, d_model), dtype) *
+        (float(1.0 / np.sqrt(h * hd))),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, spec: AttnSpec, positions):
+    b, t, _ = x.shape
+    h, kv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = constrain(x @ p["wq"], batch_axes(), None, "model")
+    k = constrain(x @ p["wk"], batch_axes(), None, "model")
+    v = constrain(x @ p["wv"], batch_axes(), None, "model")
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, h, hd)
+    k = k.reshape(b, t, kv, hd)
+    v = v.reshape(b, t, kv, hd)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+# sequences at/above this length take the memory-bounded flash path
+FLASH_THRESHOLD = 2048
+DECODE_FLASH_THRESHOLD = 8192
+
+
+def _attend(q, k, v, spec: AttnSpec) -> jax.Array:
+    t = q.shape[1]
+    if t >= FLASH_THRESHOLD:
+        from repro.models.flash import flash_full
+        return flash_full(q, k, v, window=spec.sliding_window)
+    mask = _causal_mask(t, t, window=spec.sliding_window)
+    return attention_scores(q, k, v, mask)
+
+
+def attention_full(p: Params, x: jax.Array, spec: AttnSpec) -> jax.Array:
+    """Causal self-attention over the whole sequence (train / prefill)."""
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q, k, v = _project_qkv(p, x, spec, positions)
+    out = _attend(q, k, v, spec)
+    return out.reshape(b, t, -1) @ p["wo"]
+
+
+def attention_decode(p: Params, x: jax.Array, spec: AttnSpec,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """One-token decode. x: (B,1,D); cache: (B,S,kv,hd); pos: scalar."""
+    b, _, _ = x.shape
+    s = cache_k.shape[1]
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k, v = _project_qkv(p, x, spec, positions)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    if s >= DECODE_FLASH_THRESHOLD:
+        from repro.models.flash import flash_decode
+        out = flash_decode(q, cache_k.astype(q.dtype),
+                           cache_v.astype(q.dtype), pos,
+                           window=spec.sliding_window)
+    else:
+        k_pos = jnp.arange(s)
+        mask = k_pos <= pos
+        if spec.sliding_window > 0:
+            mask &= k_pos > pos - spec.sliding_window
+        out = attention_scores(q, cache_k.astype(q.dtype),
+                               cache_v.astype(q.dtype), mask[None, :])
+    return out.reshape(b, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# ------------------------------------------------------------------- mlp
+def init_mlp(rng, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(constrain(x @ p["w_gate"], batch_axes(), None, "model"))
+    h = h * constrain(x @ p["w_up"], batch_axes(), None, "model")
+    return constrain(h @ p["w_down"], batch_axes(), None, None)
+
+
+def attention_prefill(p: Params, x: jax.Array, spec: AttnSpec
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal self-attention returning (out, (k, v)) for cache filling."""
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q, k, v = _project_qkv(p, x, spec, positions)
+    out = _attend(q, k, v, spec)
+    return out.reshape(b, t, -1) @ p["wo"], (k, v)

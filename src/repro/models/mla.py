@@ -1,0 +1,145 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are projected through a low-rank latent `c_kv` (kv_lora_rank); the KV
+cache stores only (c_kv, k_rope) — a ~4-8x cache compression.  Decode uses
+the *absorbed* formulation: W_uk is folded into the query so attention runs
+directly in the latent space, and W_uv is applied to the latent context.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm
+from repro.sharding.ctx import batch_axes, constrain
+
+Params = Dict[str, jax.Array]
+_NEG_INF = -1e30
+
+
+def init_mla(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, h, r = cfg.d_model, cfg.n_heads, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 6)
+    s = float(1.0 / np.sqrt(d))
+    sr = float(1.0 / np.sqrt(r))
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * (nd + rd)), dtype) * s,
+        "w_dkv": jax.random.normal(ks[1], (d, r), dtype) * s,
+        "w_krope": jax.random.normal(ks[2], (d, rd), dtype) * s,
+        "w_uk": jax.random.normal(ks[3], (r, h, nd), dtype) * sr,
+        "w_uv": jax.random.normal(ks[4], (r, h, vd), dtype) * sr,
+        "wo": jax.random.normal(ks[5], (h * vd, d), dtype)
+        * (float(1.0 / np.sqrt(h * vd))),
+        "kv_norm": jnp.ones((r,), dtype),
+    }
+
+
+def _queries(p: Params, x: jax.Array, cfg: ModelConfig, positions):
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = constrain(x @ p["wq"], batch_axes(), None, "model")
+    q = q.reshape(b, t, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: Params, x: jax.Array, cfg: ModelConfig, positions):
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    k_rope = x @ p["w_krope"]                       # single shared rope head
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _attend_latent(p: Params, q_nope, q_rope, c_kv, k_rope, mask,
+                   cfg: ModelConfig) -> jax.Array:
+    """Absorbed attention in latent space.
+    q_nope: (B,T,H,nd)  q_rope: (B,T,H,rd)
+    c_kv:   (B,S,r)     k_rope: (B,S,rd)
+    """
+    scale = float(1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim))
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, p["w_uk"])   # absorb W_uk
+    scores = (jnp.einsum("bthr,bsr->bhts", q_lat, c_kv)
+              + jnp.einsum("bthd,bsd->bhts", q_rope, k_rope)) * scale
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32),
+                       _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_nope.dtype)
+    ctx = jnp.einsum("bhts,bsr->bthr", probs, c_kv)           # latent context
+    out = jnp.einsum("bthr,rhv->bthv", ctx, p["w_uv"])
+    b, t = out.shape[:2]
+    return out.reshape(b, t, -1) @ p["wo"]
+
+
+_FLASH_THRESHOLD = 2048
+_DECODE_FLASH_THRESHOLD = 8192
+
+
+def _attend_auto(p: Params, q_nope, q_rope, c_kv, k_rope,
+                 cfg: ModelConfig) -> jax.Array:
+    """Causal latent attention; memory-bounded flash path for long seqs."""
+    b, t = q_nope.shape[:2]
+    if t >= _FLASH_THRESHOLD:
+        from repro.models.flash import flash_latent_full
+        scale = float(1.0 / np.sqrt(cfg.qk_nope_head_dim
+                                    + cfg.qk_rope_head_dim))
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, p["w_uk"])
+        ctx = flash_latent_full(q_lat, q_rope, c_kv, k_rope, scale)
+        out = jnp.einsum("bthr,rhv->bthv", ctx, p["w_uv"])
+        return out.reshape(b, t, -1) @ p["wo"]
+    mask = jnp.arange(t)[None, :] <= jnp.arange(t)[:, None]
+    return _attend_latent(p, q_nope, q_rope, c_kv, k_rope, mask, cfg)
+
+
+def mla_full(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+    return _attend_auto(p, q_nope, q_rope, c_kv, k_rope, cfg)
+
+
+def mla_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+               cache_ckv: jax.Array, cache_krope: jax.Array,
+               pos: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,1,D); cache_ckv: (B,S,r); cache_krope: (B,S,rd)."""
+    b = x.shape[0]
+    s = cache_ckv.shape[1]
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), (0, pos, 0))
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, k_rope.astype(cache_krope.dtype), (0, pos, 0))
+    if s >= _DECODE_FLASH_THRESHOLD:
+        from repro.models.flash import flash_latent_decode
+        scale = float(1.0 / np.sqrt(cfg.qk_nope_head_dim
+                                    + cfg.qk_rope_head_dim))
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, p["w_uk"])
+        ctx = flash_latent_decode(q_lat, q_rope, cache_ckv.astype(x.dtype),
+                                  cache_krope.astype(x.dtype), pos, scale)
+        out = jnp.einsum("bthr,rhv->bthv", ctx, p["w_uv"])
+        out = out.reshape(b, 1, -1) @ p["wo"]
+    else:
+        mask = (jnp.arange(s) <= pos)[None, :]
+        out = _attend_latent(p, q_nope, q_rope, cache_ckv.astype(x.dtype),
+                             cache_krope.astype(x.dtype), mask, cfg)
+    return out, cache_ckv, cache_krope
+
+
+def mla_prefill(p: Params, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal MLA returning (out, (c_kv, k_rope)) for the compressed cache."""
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+    out = _attend_auto(p, q_nope, q_rope, c_kv, k_rope, cfg)
+    return out, (c_kv, k_rope)

@@ -1,0 +1,68 @@
+"""Model registry: ModelConfig -> model object with the uniform API.
+
+API (duck-typed; see TransformerModel / RWKVModel / ZambaModel /
+EncDecModel):
+    init(rng) -> params
+    loss(params, batch) -> scalar           batch: tokens/labels (+frames)
+    init_cache(batch, max_len) -> cache
+    prefill(params, tokens, cache[, frames]) -> (logits, cache)
+    decode_step(params, tokens, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.rwkv import RWKVModel
+from repro.models.transformer import TransformerModel
+from repro.models.zamba import ZambaModel
+
+ARCH_IDS: List[str] = [
+    "deepseek_v2_lite",
+    "chameleon_34b",
+    "llama3_405b",
+    "gemma3_12b",
+    "llama4_scout",
+    "whisper_large_v3",
+    "codeqwen15_7b",
+    "rwkv6_1b6",
+    "zamba2_7b",
+    "qwen25_32b",
+]
+
+# CLI aliases (--arch accepts either form)
+ALIASES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "chameleon-34b": "chameleon_34b",
+    "llama3-405b": "llama3_405b",
+    "gemma3-12b": "gemma3_12b",
+    "llama4-scout-17b-a16e": "llama4_scout",
+    "whisper-large-v3": "whisper_large_v3",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2.5-32b": "qwen25_32b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return EncDecModel(cfg)
+    if cfg.ssm_kind == "rwkv6":
+        return RWKVModel(cfg)
+    if cfg.attn_every:
+        return ZambaModel(cfg)
+    return TransformerModel(cfg)
+
+
+def build(arch: str):
+    cfg = get_config(arch)
+    return cfg, build_model(cfg)

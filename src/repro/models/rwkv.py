@@ -1,0 +1,107 @@
+"""RWKV6 ("Finch") decoder stack — attention-free, O(1)-state decode.
+
+The paper's channel-partitioning technique applies to the r/k/v/g/o
+projections and the channel-mix FFN (all plain matmuls); the WKV recurrence
+itself is sequential and is never split (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.ssm import (init_rwkv6, init_rwkv_channel_mix,
+                              rwkv6_mix, rwkv_channel_mix,
+                              rwkv6_state_shapes)
+
+Params = Dict[str, Any]
+
+
+class RWKVModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = {"bfloat16": jnp.bfloat16,
+                      "float32": jnp.float32}[cfg.dtype]
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_emb, k_out, k_blocks = jax.random.split(rng, 3)
+        blocks = []
+        for k in jax.random.split(k_blocks, cfg.n_layers):
+            k1, k2 = jax.random.split(k)
+            blocks.append({
+                "ln1": jnp.ones((cfg.d_model,), self.dtype),
+                "ln2": jnp.ones((cfg.d_model,), self.dtype),
+                "tm": init_rwkv6(k1, cfg, self.dtype),
+                "cm": init_rwkv_channel_mix(k2, cfg, self.dtype),
+            })
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+        return {
+            "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                       self.dtype) * 0.02,
+            "unembed": jax.random.normal(k_out, (cfg.d_model,
+                                                 cfg.vocab_size),
+                                         self.dtype)
+            * (float(1.0 / np.sqrt(cfg.d_model))),
+            "ln_f": jnp.ones((cfg.d_model,), self.dtype),
+            "blocks": stacked,
+        }
+
+    # state pytree: wkv (L,B,H,hd,hd), x_tm (L,B,D), x_cm (L,B,D)
+    def init_cache(self, batch: int, max_len: int = 0):
+        cfg = self.cfg
+        wkv_shape, xs_shape = rwkv6_state_shapes(cfg, batch)
+        L = cfg.n_layers
+        return {
+            "wkv": jnp.zeros((L,) + wkv_shape, jnp.float32),
+            "x_tm": jnp.zeros((L,) + xs_shape, self.dtype),
+            "x_cm": jnp.zeros((L,) + xs_shape, self.dtype),
+        }
+
+    def _stack_forward(self, params: Params, x: jax.Array, cache):
+        cfg = self.cfg
+
+        def body(x, scanned):
+            p, wkv, x_tm, x_cm = scanned
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, wkv2, x_tm2 = rwkv6_mix(p["tm"], h, cfg, wkv, x_tm)
+            x = x + h
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            h, x_cm2 = rwkv_channel_mix(p["cm"], h, x_cm)
+            x = x + h
+            return x, (wkv2, x_tm2, x_cm2)
+
+        x, (wkv, x_tm, x_cm) = jax.lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["x_tm"],
+                      cache["x_cm"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return x, {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
+
+    def forward(self, params: Params, tokens: jax.Array):
+        x = params["embed"][tokens]
+        cache = self.init_cache(tokens.shape[0])
+        x, _ = self._stack_forward(params, x, cache)
+        return x @ params["unembed"], jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch["tokens"])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        return nll.mean()
+
+    def prefill(self, params: Params, tokens: jax.Array, cache):
+        x = params["embed"][tokens]
+        x, cache = self._stack_forward(params, x, cache)
+        return x[:, -1, :] @ params["unembed"], cache
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache,
+                    pos: jax.Array):
+        del pos                      # recurrent state carries position
+        x = params["embed"][tokens]  # (B, 1, D)
+        x, cache = self._stack_forward(params, x, cache)
+        return (x[:, 0, :] @ params["unembed"]), cache

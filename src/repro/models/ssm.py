@@ -1,0 +1,367 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba2 (SSD).
+
+Both are implemented as an O(T) lax.scan over time with an explicit
+recurrent state, which gives three modes for free:
+  * train / prefill: scan over the whole sequence, return final state;
+  * decode: a single recurrence step against the carried state (O(1) per
+    token — this is why the ssm/hybrid architectures run the long_500k
+    shape that full-attention models skip).
+
+RWKV6 follows arXiv:2404.05892: token-shift interpolation, data-dependent
+per-channel decay w_t via a low-rank MLP, per-head WKV state of shape
+(head_dim, head_dim), bonus term u.  (Simplification vs. the reference
+implementation: one shared token-shift mix per projection instead of the
+5-way DDLerp LoRA tower; noted in DESIGN.md.)
+
+Mamba2 follows arXiv:2405.21060 (as used by Zamba2): depthwise causal
+conv1d on the xBC stream, scalar-per-head decay A, state (n_heads, head_dim,
+d_state), gated output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.sharding.ctx import batch_axes, constrain
+
+Params = Dict[str, jax.Array]
+
+
+# =================================================================== RWKV6
+def init_rwkv6(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    n_heads = d // hd
+    lora = 32
+    ks = jax.random.split(rng, 10)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "mix": jax.random.uniform(ks[0], (5, d), dtype),   # r,k,v,g,w shifts
+        "wr": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "wg": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "wo": jax.random.normal(ks[5], (d, d), dtype) * s,
+        "w0": jnp.zeros((d,), jnp.float32) - 6.0,          # decay bias
+        "w_a": jax.random.normal(ks[6], (d, lora), dtype) * s,
+        "w_b": jax.random.normal(ks[7], (lora, d), dtype) * (float(1 / np.sqrt(lora))),
+        "u": jax.random.normal(ks[8], (n_heads, hd), jnp.float32) * 0.1,
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def _rwkv_projections(p: Params, x: jax.Array, x_prev: jax.Array,
+                      cfg: ModelConfig):
+    """x: (B,T,D); x_prev: (B,T,D) = x shifted right by one token."""
+    xx = x_prev - x
+    xr, xk, xv, xg, xw = [x + xx * p["mix"][i] for i in range(5)]
+    r = constrain(xr @ p["wr"], batch_axes(), None, "model")
+    k = constrain(xk @ p["wk"], batch_axes(), None, "model")
+    v = constrain(xv @ p["wv"], batch_axes(), None, "model")
+    g = jax.nn.silu(constrain(xg @ p["wg"], batch_axes(), None, "model"))
+    # data-dependent decay (per channel, in (0,1))
+    ww = p["w0"] + (jnp.tanh(xw @ p["w_a"]) @ p["w_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww))
+    return r, k, v, g, w
+
+
+def _wkv_step(state, inputs, u):
+    """state: (B,H,hd,hd); r,k,v: (B,H,hd); w: (B,H,hd)."""
+    r, k, v, w = inputs
+    kv = k[..., :, None] * v[..., None, :]            # (B,H,hd,hd)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, out
+
+
+def rwkv6_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+              state: jax.Array, x_last: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Time-mixing over a full sequence.
+
+    state: (B, H, hd, hd) WKV state entering this chunk;
+    x_last: (B, D) last token of the previous chunk (token shift carry).
+    Returns (y, new_state, new_x_last).
+    """
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _rwkv_projections(p, x, x_prev, cfg)
+
+    if t >= _WKV_CHUNK and t % _WKV_CHUNK == 0:
+        # chunked WKV (see _wkv_chunked): the per-timestep scan streams the
+        # (B,H,hd,hd) state through HBM every token — the dominant term of
+        # the rwkv6 prefill_32k baseline (EXPERIMENTS.md §Perf D)
+        def heads_bt(z):
+            return constrain(z.reshape(b, t, h, hd).astype(jnp.float32),
+                             batch_axes(), None, "model", None)
+
+        rs, ks, vs, ws = map(heads_bt, (r, k, v, w))
+        state_f, y = _wkv_chunked(rs, ks, vs, ws, p["u"],
+                                  state.astype(jnp.float32))
+        y = y.reshape(b, t, d).astype(x.dtype)
+    else:
+        def split_heads(z):
+            return z.reshape(b, t, h, hd).swapaxes(0, 1).astype(jnp.float32)
+
+        rs, ks, vs, ws = map(split_heads, (r, k, v, w))   # (T,B,H,hd)
+        rs, ks, vs, ws = (constrain(z, None, batch_axes(), "model", None)
+                          for z in (rs, ks, vs, ws))
+
+        def step(s, inp):
+            return _wkv_step(s, inp, p["u"])
+
+        state_f, outs = jax.lax.scan(step, state.astype(jnp.float32),
+                                     (rs, ks, vs, ws))
+        y = outs.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype)
+    # per-head group norm
+    y = y.reshape(b, t, h, hd)
+    mu = y.mean(-1, keepdims=True)
+    var = y.astype(jnp.float32).var(-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).astype(x.dtype)
+    y = y.reshape(b, t, d) * p["ln_x"]
+    y = (y * g) @ p["wo"]
+    return y, state_f.astype(state.dtype), x[:, -1, :]
+
+
+def init_rwkv_channel_mix(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "mix_k": jax.random.uniform(k1, (d,), dtype),
+        "wk": jax.random.normal(k2, (d, ff), dtype) * s,
+        "wv": jax.random.normal(k3, (ff, d), dtype) * (float(1 / np.sqrt(ff))),
+    }
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, x_last: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (x_prev - x) * p["mix_k"]
+    h = jnp.square(jax.nn.relu(constrain(xk @ p["wk"], batch_axes(),
+                                         None, "model")))
+    return constrain(h @ p["wv"], batch_axes(), None, None), x[:, -1, :]
+
+
+# ================================================================== Mamba2
+_CONV_K = 4
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    n_heads = d_in // hd
+    ks = jax.random.split(rng, 6)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        # projections: z (gate), x, B, C, dt
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_in + 2 * n + n_heads),
+                                  dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (_CONV_K, d_in + 2 * n), dtype)
+        * 0.3,
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_z": jnp.ones((d_in,), dtype),
+        "w_out": jax.random.normal(ks[2], (d_in, d), dtype)
+        * (float(1 / np.sqrt(d_in))),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           carry: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,T,C); w: (K,C); carry: (B,K-1,C) previous inputs."""
+    ext = jnp.concatenate([carry, x], axis=1)             # (B, T+K-1, C)
+    k = w.shape[0]
+    out = sum(ext[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_carry = ext[:, -(k - 1):, :] if k > 1 else carry
+    return out, new_carry
+
+
+def mamba2_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+               state: jax.Array, conv_carry: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """SSD over a sequence.  state: (B, H, hd, N); conv_carry: (B,K-1,C)."""
+    b, t, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    h = d_in // hd
+
+    proj = constrain(x @ p["w_in"], batch_axes(), None, "model")
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * n], axis=-1)
+    xbc, new_carry = _causal_depthwise_conv(xbc, p["conv_w"], conv_carry)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,T,H)
+    a = -jnp.exp(p["A_log"])                              # (H,)
+    decay = jnp.exp(dt * a)                               # (B,T,H)
+
+    xs_h = constrain(xs.reshape(b, t, h, hd).astype(jnp.float32),
+                     batch_axes(), None, "model", None)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    if t >= _SSD_CHUNK and t % _SSD_CHUNK == 0:
+        # chunked SSD (arXiv:2405.21060): per-chunk matmul form.  The
+        # per-timestep scan streams the (B,H,hd,N) state through HBM every
+        # step — the dominant roofline term of the zamba2 train_4k
+        # baseline (EXPERIMENTS.md Perf iteration A); chunking exchanges
+        # state once per chunk and turns the work into MXU matmuls.
+        state_f, y = _ssd_chunked(xs_h, bf, cf, dt, a,
+                                  state.astype(jnp.float32))
+    else:
+        def step(s, inp):
+            x_t, b_t, c_t, dec_t, dt_t = inp              # (B,H,hd) (B,N)..
+            upd = dt_t[..., None, None] * (x_t[..., :, None]
+                                           * b_t[:, None, None, :])
+            s = dec_t[..., None, None] * s + upd          # (B,H,hd,N)
+            y_t = jnp.einsum("bhdn,bn->bhd", s, c_t)
+            return s, y_t
+
+        seq = (xs_h.swapaxes(0, 1), bf.swapaxes(0, 1), cf.swapaxes(0, 1),
+               decay.swapaxes(0, 1), dt.swapaxes(0, 1))
+        state_f, ys = jax.lax.scan(step, state.astype(jnp.float32), seq)
+        y = ys.swapaxes(0, 1)                             # (B,T,H,hd)
+    y = y + p["D"][None, None, :, None] * xs_h
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z) * p["norm_z"]
+    return y @ p["w_out"], state_f.astype(state.dtype), new_carry
+
+
+_SSD_CHUNK = 256
+
+
+def _ssd_chunked(x, bmat, cmat, dt, a, state0):
+    """Chunked SSD recurrence.
+
+    x: (B,T,H,hd) f32; bmat/cmat: (B,T,N); dt: (B,T,H); a: (H,) negative;
+    state0: (B,H,hd,N).  Returns (final_state, y (B,T,H,hd)).
+
+    Per chunk of length L (all cumulative sums chunk-local):
+        l_t   = cumsum(dt_u * a)                      log-decay, (B,L,H)
+        y_t   = exp(l_t) * (C_t . h_0)
+              + sum_{j<=t} exp(l_t - l_j) (C_t . B_j) dt_j x_j
+        h_L   = exp(l_L) h_0 + sum_j exp(l_L - l_j) dt_j B_j x_j
+    """
+    b, t, h, hd = x.shape
+    L = _SSD_CHUNK
+    nc = t // L
+    xc = x.reshape(b, nc, L, h, hd).transpose(1, 0, 2, 3, 4)
+    bc = bmat.reshape(b, nc, L, -1).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, L, -1).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, L, h).transpose(1, 0, 2, 3)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(h0, inp):
+        xk, bk, ck, dtk = inp                   # (B,L,H,hd) (B,L,N) (B,L,H)
+        logd = dtk * a                          # (B,L,H), <= 0
+        l = jnp.cumsum(logd, axis=1)            # (B,L,H)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bln,bhdn->blhd", ck, h0) \
+            * jnp.exp(l)[..., None]
+        # intra-chunk: (C_t . B_j) with per-head decay window
+        s_cb = jnp.einsum("btn,bjn->btj", ck, bk)          # (B,L,L)
+        ldiff = l[:, :, None, :] - l[:, None, :, :]        # (B,L,L,H)
+        w = jnp.where(causal[None, :, :, None],
+                      jnp.exp(ldiff), 0.0) * s_cb[..., None]
+        xdt = xk * dtk[..., None]                          # (B,L,H,hd)
+        y_intra = jnp.einsum("btjh,bjhd->bthd", w, xdt)
+        # state update
+        decay_to_end = jnp.exp(l[:, -1:, :] - l)           # (B,L,H)
+        scale = jnp.exp(l[:, -1])                          # (B,H)
+        h_new = scale[:, :, None, None] * h0 \
+            + jnp.einsum("blh,bln,blhd->bhdn", decay_to_end * dtk, bk, xk)
+        return h_new, y_inter + y_intra
+
+    state_f, yc = jax.lax.scan(chunk_step, state0, (xc, bc, cc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, t, h, hd)
+    return state_f, y
+
+
+def mamba2_state_shapes(cfg: ModelConfig, batch: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    return ((batch, h, cfg.ssm_head_dim, cfg.ssm_state),
+            (batch, _CONV_K - 1, d_in + 2 * cfg.ssm_state))
+
+
+def rwkv6_state_shapes(cfg: ModelConfig, batch: int):
+    h = cfg.d_model // cfg.ssm_head_dim
+    return ((batch, h, cfg.ssm_head_dim, cfg.ssm_head_dim),
+            (batch, cfg.d_model))
+
+
+# ------------------------------------------------------------ chunked WKV
+_WKV_CHUNK = 64
+_WKV_SUB = 16
+
+
+def _wkv_chunked(r, k, v, w, u, state0):
+    """Chunked RWKV6 WKV — exact, numerically-safe two-level scheme.
+
+    r/k/v: (B,T,H,hd) f32; w: (B,T,H,hd) per-channel decay in (0,1);
+    u: (H,hd); state0: (B,H,hd,hd).  Returns (final_state, out).
+
+    The naive two-factor trick exp(l_{t-1}) * exp(-l_j) overflows/clamps
+    under strong decay, so exponents are re-centered per length-16
+    sub-chunk: with ref_s = l at sub-chunk s entry,
+        A[t, (s,j)] = sum_k r_t exp(l_{t-1}-ref_s) . k_j exp(ref_s-l_j)
+    both exponents are bounded (<=0, and <= 16 steps of decay resp.).
+    """
+    b, t, h, hd = r.shape
+    L, c = _WKV_CHUNK, _WKV_SUB
+    ns = L // c
+    nc = t // L
+
+    def to_chunks(z):
+        return z.reshape(b, nc, L, h, hd).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    sub_of = jnp.arange(L) // c                       # (L,)
+    valid_ts = sub_of[:, None] >= jnp.arange(ns)[None, :]   # (L, ns)
+
+    def chunk_step(s0, inp):
+        rk, kk, vk, wk = inp                          # (B,L,H,hd)
+        logw = jnp.log(jnp.maximum(wk, 1e-38))
+        l = jnp.cumsum(logw, axis=1)                  # (B,L,H,hd) <= 0
+        l_prev = l - logw                             # l_{t-1}, l_0 = 0
+        ref = l_prev.reshape(b, ns, c, h, hd)[:, :, 0]        # (B,ns,H,hd)
+
+        # queries re-centered at each sub-chunk reference
+        e_r = l_prev[:, :, None] - ref[:, None, :, :, :]      # (B,L,ns,H,hd)
+        e_r = jnp.where(valid_ts[None, :, :, None, None], e_r, -jnp.inf)
+        rdx = rk[:, :, None] * jnp.exp(e_r)                   # (B,L,ns,H,hd)
+        # keys re-centered at their own sub-chunk reference
+        e_k = (ref[:, :, None] - l.reshape(b, ns, c, h, hd))  # (B,ns,c,H,hd)
+        kdx = kk.reshape(b, ns, c, h, hd) * jnp.exp(e_k)
+
+        a = jnp.einsum("btshk,bsjhk->bhtsj", rdx, kdx)
+        a = a.reshape(b, h, L, L)
+        a = jnp.where(strict[None, None], a, 0.0)
+        out_intra = jnp.einsum("bhtj,bjhv->bthv", a, vk)
+        diag = jnp.einsum("blhk,blhk->blh", rk * u[None, None], kk)
+        out_inter = jnp.einsum("blhk,bhkv->blhv", rk * jnp.exp(l_prev), s0)
+        out = out_inter + out_intra + diag[..., None] * vk
+
+        decay_to_end = jnp.exp(l[:, -1:] - l)         # (B,L,H,hd)
+        s_new = jnp.exp(l[:, -1])[:, :, :, None] * s0 \
+            + jnp.einsum("bjhk,bjhv->bhkv", kk * decay_to_end, vk)
+        return s_new, out
+
+    state_f, outs = jax.lax.scan(chunk_step, state0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, hd)
+    return state_f, out

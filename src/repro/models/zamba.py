@@ -1,0 +1,179 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a weight-SHARED attention block
+applied every `attn_every` layers (arXiv:2411.15242).
+
+Simplifications vs. the reference model (noted in DESIGN.md):
+  * the shared block's per-application LoRA adapters are omitted;
+  * the shared block input is the residual stream (not concat[x, x0]).
+
+Layer program: n_groups = n_layers // attn_every; each group = one shared
+attention application followed by a scan over `attn_every` stacked Mamba2
+layers.  The shared attention keeps one KV cache per application.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (AttnSpec, attention_decode, attention_full,
+                                 attention_prefill, init_attention,
+                                 init_mlp, mlp, rms_norm)
+from repro.models.ssm import init_mamba2, mamba2_mix, mamba2_state_shapes
+
+Params = Dict[str, Any]
+
+
+class ZambaModel:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.dtype = {"bfloat16": jnp.bfloat16,
+                      "float32": jnp.float32}[cfg.dtype]
+
+    def _attn_spec(self) -> AttnSpec:
+        cfg = self.cfg
+        return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_emb, k_out, k_sh, k_m = jax.random.split(rng, 4)
+        k_sa, k_sm = jax.random.split(k_sh)
+        mamba_blocks = []
+        for k in jax.random.split(k_m, cfg.n_layers):
+            mamba_blocks.append({
+                "ln": jnp.ones((cfg.d_model,), self.dtype),
+                "mixer": init_mamba2(k, cfg, self.dtype),
+            })
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *mamba_blocks)
+        # reshape to (n_groups, attn_every, ...)
+        stacked = jax.tree.map(
+            lambda x: x.reshape((self.n_groups, cfg.attn_every)
+                                + x.shape[1:]), stacked)
+        return {
+            "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                       self.dtype) * 0.02,
+            "unembed": jax.random.normal(k_out, (cfg.d_model,
+                                                 cfg.vocab_size),
+                                         self.dtype)
+            * (float(1.0 / np.sqrt(cfg.d_model))),
+            "ln_f": jnp.ones((cfg.d_model,), self.dtype),
+            "shared_attn": {
+                "ln1": jnp.ones((cfg.d_model,), self.dtype),
+                "ln2": jnp.ones((cfg.d_model,), self.dtype),
+                "attn": init_attention(k_sa, cfg.d_model, self._attn_spec(),
+                                       self.dtype),
+                "mlp": init_mlp(k_sm, cfg.d_model, cfg.d_ff, self.dtype),
+            },
+            "mamba": stacked,
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        ssm_shape, conv_shape = mamba2_state_shapes(cfg, batch)
+        g, k = self.n_groups, cfg.attn_every
+        return {
+            "attn_k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads,
+                                 cfg.head_dim), self.dtype),
+            "attn_v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads,
+                                 cfg.head_dim), self.dtype),
+            "ssm": jnp.zeros((g, k) + ssm_shape, jnp.float32),
+            "conv": jnp.zeros((g, k) + conv_shape, self.dtype),
+        }
+
+    def _mamba_group(self, group_params, x, ssm_states, conv_states):
+        cfg = self.cfg
+
+        def body(x, scanned):
+            p, s, c = scanned
+            h = rms_norm(x, p["ln"], cfg.norm_eps)
+            h, s2, c2 = mamba2_mix(p["mixer"], h, cfg, s, c)
+            return x + h, (s2, c2)
+
+        x, (s2, c2) = jax.lax.scan(body, x,
+                                   (group_params, ssm_states, conv_states))
+        return x, s2, c2
+
+    def _shared_attn(self, params, x, mode, cache_k=None, cache_v=None,
+                     pos=None):
+        cfg = self.cfg
+        p = params["shared_attn"]
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mode == "full":
+            h = attention_full(p["attn"], h, self._attn_spec())
+            kv = None
+        elif mode == "prefill":
+            h, kv = attention_prefill(p["attn"], h, self._attn_spec())
+        else:
+            h, ck, cv = attention_decode(p["attn"], h, self._attn_spec(),
+                                         cache_k, cache_v, pos)
+            kv = (ck, cv)
+        x = x + h
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp(p["mlp"], h), kv
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params: Params, tokens: jax.Array):
+        x = params["embed"][tokens]
+        cache = self.init_cache(tokens.shape[0], 1)
+        for g in range(self.n_groups):
+            x, _ = self._shared_attn(params, x, "full")
+            gp = jax.tree.map(lambda a, g=g: a[g], params["mamba"])
+            x, _, _ = self._mamba_group(gp, x, cache["ssm"][g],
+                                        cache["conv"][g])
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        return x @ params["unembed"], jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch["tokens"])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        return nll.mean()
+
+    def _run(self, params, x, cache, mode, pos=None):
+        new_ak, new_av, new_ssm, new_conv = [], [], [], []
+        for g in range(self.n_groups):
+            if mode == "prefill":
+                x, kv = self._shared_attn(params, x, "prefill")
+                k_full = jax.lax.dynamic_update_slice(
+                    cache["attn_k"][g], kv[0].astype(self.dtype),
+                    (0, 0, 0, 0))
+                v_full = jax.lax.dynamic_update_slice(
+                    cache["attn_v"][g], kv[1].astype(self.dtype),
+                    (0, 0, 0, 0))
+                new_ak.append(k_full)
+                new_av.append(v_full)
+            else:
+                x, (ck, cv) = self._shared_attn(
+                    params, x, "decode", cache["attn_k"][g],
+                    cache["attn_v"][g], pos)
+                new_ak.append(ck)
+                new_av.append(cv)
+            gp = jax.tree.map(lambda a, g=g: a[g], params["mamba"])
+            x, s2, c2 = self._mamba_group(gp, x, cache["ssm"][g],
+                                          cache["conv"][g])
+            new_ssm.append(s2)
+            new_conv.append(c2)
+        new_cache = {"attn_k": jnp.stack(new_ak),
+                     "attn_v": jnp.stack(new_av),
+                     "ssm": jnp.stack(new_ssm),
+                     "conv": jnp.stack(new_conv)}
+        return x, new_cache
+
+    def prefill(self, params: Params, tokens: jax.Array, cache):
+        x = params["embed"][tokens]
+        x, cache = self._run(params, x, cache, "prefill")
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        return x[:, -1, :] @ params["unembed"], cache
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache,
+                    pos: jax.Array):
+        x = params["embed"][tokens]
+        x, cache = self._run(params, x, cache, "decode", pos)
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        return x[:, 0, :] @ params["unembed"], cache

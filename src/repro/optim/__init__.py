@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, init_adamw
+__all__ = ["AdamWConfig", "AdamWState", "adamw_update", "init_adamw"]

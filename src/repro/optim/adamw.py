@@ -1,0 +1,74 @@
+"""AdamW + cosine schedule with linear warmup (pure JAX pytree optimizer).
+
+Optimizer state is a pytree congruent with the parameters, so it inherits
+the parameter sharding under pjit (ZeRO-style: each device holds the
+moments of its own weight shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = lambda: jax.tree.map(    # noqa: E731
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads,
+                 state: AdamWState) -> Tuple[Any, AdamWState]:
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    lr = _schedule(cfg, step)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

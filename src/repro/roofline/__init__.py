@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     RooflineReport, build_report,
+                                     collective_bytes_per_device,
+                                     model_flops_estimate)
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport",
+           "build_report", "collective_bytes_per_device",
+           "model_flops_estimate"]

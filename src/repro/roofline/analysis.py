@@ -1,0 +1,135 @@
+"""Roofline-term extraction from lowered/compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+`compiled.cost_analysis()` reports the *per-device* program, so FLOPs/bytes
+are multiplied by the device count to get cluster totals (verified in
+tests/test_roofline.py).  collective_bytes is parsed from the post-SPMD HLO
+text: the summed operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instructions (per device), times devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64"
+                       r"|u64|f64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_per_device(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind, from one device's HLO.
+
+    Delegates to the structural walker (roofline/hlo_walk.py), which
+    resolves operand shapes through a per-computation symbol table and
+    multiplies loop bodies by their known trip counts."""
+    from repro.roofline.hlo_walk import analyze_hlo
+    return {k: int(v) for k, v in analyze_hlo(hlo_text).coll.items()}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # cluster total
+    hlo_bytes: float              # cluster total
+    collective_bytes: float       # cluster total
+    collective_breakdown: Dict[str, int]
+    model_flops: float            # 6*N*D (or 6*N_active*D)
+    peak_memory_bytes: float      # per device, from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training; 2*N*D forward-only (prefill);
+    2*N*1 token for decode.  MoE uses active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def build_report(arch: str, shape, mesh_name: str, chips: int,
+                 cost: dict, mem_analysis, hlo_text: str,
+                 cfg) -> RooflineReport:
+    # Structural walk with while-trip accounting (raw cost_analysis counts
+    # loop bodies once — see roofline/hlo_walk.py and tests/test_roofline).
+    from repro.roofline.hlo_walk import analyze_hlo
+    walked = analyze_hlo(hlo_text)
+    peak = getattr(mem_analysis, "temp_size_in_bytes", 0) + \
+        getattr(mem_analysis, "argument_size_in_bytes", 0) + \
+        getattr(mem_analysis, "output_size_in_bytes", 0)
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=walked.flops * chips, hlo_bytes=walked.bytes_ * chips,
+        collective_bytes=float(sum(walked.coll.values())) * chips,
+        collective_breakdown={k: int(v) for k, v in walked.coll.items()},
+        model_flops=model_flops_estimate(cfg, shape),
+        peak_memory_bytes=float(peak),
+    )

@@ -1,0 +1,94 @@
+"""Batched serving engine: request queue -> prefill -> decode loop.
+
+A deliberately small but real continuous-batching engine: requests arrive
+with prompts, get packed into a fixed batch, prefilled once, then decoded
+step-by-step with greedy/temperature sampling until max tokens.  The same
+`prefill`/`decode_step` functions are what the dry-run lowers at production
+shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (T,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0           # 0 = greedy
+    frames: Optional[np.ndarray] = None  # enc-dec only
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, model, params, *,
+                 max_batch: int = 4, max_len: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, logits / temperature,
+                                      axis=-1).astype(jnp.int32)
+
+    def run(self, requests: List[Request]) -> List[Completion]:
+        out: List[Completion] = []
+        for i in range(0, len(requests), self.max_batch):
+            out.extend(self._run_batch(requests[i:i + self.max_batch]))
+        return out
+
+    def _run_batch(self, batch: List[Request]) -> List[Completion]:
+        b = len(batch)
+        t = max(len(r.prompt) for r in batch)
+        toks = np.zeros((b, t), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, t - len(r.prompt):] = r.prompt     # left-pad
+        toks = jnp.asarray(toks)
+
+        cache = self.model.init_cache(b, self.max_len)
+        if self.cfg.is_encoder_decoder:
+            frames = jnp.asarray(np.stack([
+                r.frames if r.frames is not None else
+                np.zeros((self.cfg.encoder_seq, self.cfg.d_model),
+                         np.float32)
+                for r in batch]))
+            logits, cache = self._prefill(self.params, toks, cache, frames)
+        else:
+            logits, cache = self._prefill(self.params, toks, cache)
+
+        max_new = max(r.max_new_tokens for r in batch)
+        temperature = batch[0].temperature
+        generated = [[] for _ in range(b)]
+        tok = self._sample(logits, temperature)
+        for i in range(b):
+            generated[i].append(int(tok[i]))
+        for step in range(1, max_new):
+            pos = jnp.int32(t + step - 1)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         pos)
+            tok = self._sample(logits, temperature)
+            for i in range(b):
+                if len(generated[i]) < batch[i].max_new_tokens:
+                    generated[i].append(int(tok[i]))
+        return [Completion(r.rid, g) for r, g in zip(batch, generated)]

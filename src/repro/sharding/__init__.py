@@ -1,0 +1,5 @@
+from repro.sharding.rules import (batch_shardings, batch_spec,
+                                  cache_shardings, param_shardings,
+                                  param_spec, replicated, sanitize)
+__all__ = ["batch_shardings", "batch_spec", "cache_shardings",
+           "param_shardings", "param_spec", "replicated", "sanitize"]

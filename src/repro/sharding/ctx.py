@@ -1,0 +1,87 @@
+"""Ambient-mesh activation sharding constraints.
+
+Model code calls `constrain(x, "data", None, "model")` at key points (qkv
+projections, FFN intermediates, MoE expert dims).  When a mesh has been
+installed via `activation_mesh(mesh)` the constraint becomes a
+`with_sharding_constraint`; axes that do not divide the corresponding dim
+are dropped (replicated) so any (config x mesh) lowers.  Without an
+installed mesh (CPU tests, examples) it is the identity — model code stays
+runnable everywhere.
+
+Why this exists: with input shardings alone, XLA's sharding propagation on
+the 256-chip mesh prefers to all-gather the (model-axis-sharded) weights
+and compute replicated — a ~16x FLOP and collective blow-up measured in the
+codeqwen train_4k dry-run (see EXPERIMENTS.md §Perf, iteration 0 -> 1).
+Constraining activations pins the tensor-parallel pattern instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh):
+    token = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _manual_axes() -> frozenset:
+    """Mesh axes currently under shard_map manual control (constraints on
+    those axes are illegal inside the manual region)."""
+    try:
+        amesh = jax.sharding.get_abstract_mesh()
+        return frozenset(
+            name for name, ty in zip(amesh.axis_names, amesh.axis_types)
+            if "Manual" in str(ty))
+    except Exception:                                  # noqa: BLE001
+        return frozenset()
+
+
+def constrain(x: jax.Array, *spec):
+    """Best-effort sharding constraint; identity without an ambient mesh."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    manual = _manual_axes()
+    spec = tuple(spec) + (None,) * (x.ndim - len(spec))
+    clean = []
+    for dim, axis in zip(x.shape, spec):
+        if axis is None:
+            clean.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        if any(a not in mesh.shape or a in manual for a in axes):
+            clean.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        clean.append(axis if (size > 1 and dim % size == 0) else None)
+    if all(c is None for c in clean) and manual:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean)))
+
+
+def batch_axes():
+    """('pod','data') on the multi-pod mesh, else ('data',)."""
+    mesh = _MESH.get()
+    if mesh is not None and "pod" in mesh.shape:
+        return ("pod", "data")
+    return ("data",)

@@ -1,0 +1,177 @@
+"""Named-axis sharding rules for parameters, optimizer state, batches and
+KV caches.
+
+Rules are regex patterns over flattened parameter paths, each giving a
+PartitionSpec *anchored at the trailing dimensions* of the leaf; leading
+stack axes (scan repeats, zamba groups) are padded with None.  After rule
+lookup every spec is *sanitized*: an axis that does not evenly divide its
+dimension is dropped (replicated) so that any (config x mesh) combination
+lowers — awkward head counts degrade gracefully instead of failing.
+
+Strategy (2D "data x model", optionally with a leading "pod" axis):
+  * token embeddings / unembeddings: vocab on model;
+  * attention/MLP projections: output features on model, input features on
+    data (FSDP-style 2D weight sharding keeps 405B-class checkpoints and
+    AdamW moments within per-chip HBM);
+  * MoE experts: expert axis on model;
+  * batches: batch dim on (pod, data);
+  * KV caches: batch on data; heads (or head_dim, or the MLA latent) on
+    model; for batch=1 long-context decode the *sequence* dim goes on data.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# (path regex, min ndim of the anchored spec, trailing spec)
+_PARAM_RULES: Tuple[Tuple[str, int, Tuple], ...] = (
+    (r"embed$", 2, ("model", "data")),
+    (r"unembed$", 2, ("data", "model")),
+    # --- MoE (must precede generic ffn rules; leaves are 3D E,.,.) ---
+    (r"ffn/router$", 2, (None, None)),
+    (r"(ffn|moe)/w_gate$", 3, ("model", "data", None)),
+    (r"(ffn|moe)/w_up$", 3, ("model", "data", None)),
+    (r"(ffn|moe)/w_down$", 3, ("model", None, "data")),
+    (r"shared/w_gate$", 2, ("data", "model")),
+    (r"shared/w_up$", 2, ("data", "model")),
+    (r"shared/w_down$", 2, ("model", "data")),
+    # --- MLA ---
+    (r"attn/wq$", 2, ("data", "model")),
+    (r"w_dkv$", 2, ("data", "model")),
+    (r"w_krope$", 2, ("data", None)),
+    (r"w_uk$", 3, (None, "model", None)),
+    (r"w_uv$", 3, (None, "model", None)),
+    # --- attention ---
+    (r"(attn|self_attn|cross_attn)/w[kv]$", 2, ("data", "model")),
+    (r"(attn|self_attn|cross_attn)/b[qkv]$", 1, ("model",)),
+    (r"(attn|self_attn|cross_attn|tm)/wo$", 2, ("model", "data")),
+    # --- dense mlp ---
+    (r"(ffn|mlp)/w_gate$", 2, ("data", "model")),
+    (r"(ffn|mlp)/w_up$", 2, ("data", "model")),
+    (r"(ffn|mlp)/w_down$", 2, ("model", "data")),
+    # --- rwkv ---
+    (r"tm/w[rkvg]$", 2, ("data", "model")),
+    (r"cm/wk$", 2, ("data", "model")),
+    (r"cm/wv$", 2, ("model", "data")),
+    # --- mamba ---
+    (r"mixer/w_in$", 2, ("data", "model")),
+    (r"mixer/w_out$", 2, ("model", "data")),
+)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def sanitize(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes that don't divide the dim; never shard size-1 dims."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size == 0 and dim >= size and size > 1:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    ps = _path_str(path)
+    nd = leaf.ndim
+    for pat, anchor_nd, tail in _PARAM_RULES:
+        if re.search(pat, ps) and nd >= anchor_nd:
+            spec = (None,) * (nd - len(tail)) + tail
+            return sanitize(spec, leaf.shape, mesh)
+    return P(*([None] * nd))                 # norms, scalars, biases
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """NamedSharding pytree for a params (or congruent opt-state) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params_shape)
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec(batch_size: int, mesh: Mesh) -> P:
+    axes = _batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch_size % size == 0 and batch_size >= size:
+        return P(axes)
+    if batch_size % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """Shard dim 0 (batch) of every batch leaf."""
+    def spec(leaf):
+        s = batch_spec(leaf.shape[0], mesh)
+        return NamedSharding(mesh, P(*(tuple(s) + (None,) *
+                                       (leaf.ndim - 1))))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_spec(path, leaf, mesh: Mesh, *, batch: int,
+               seq_shard: bool) -> P:
+    """KV-cache leaf sharding.
+
+    Layout conventions (see models/*): trailing dims are one of
+      (B, S, kv, hd) attention cache   (possibly with leading stack dims)
+      (B, S, r)      MLA latent cache
+      (B, H, hd, N)  ssm state; (B, K-1, C) conv carry; (B, D) shift carry
+    """
+    ps = _path_str(path)
+    nd = leaf.ndim
+    b_ax = batch_spec(batch, mesh)
+    b_entry = tuple(b_ax)[0] if tuple(b_ax) else None
+    s_entry = "data" if (seq_shard and b_entry is None) else None
+
+    if re.search(r"(wkv|ssm)", ps) and nd >= 4:          # (B,H,hd,N)-like
+        tail = (b_entry, "model", None, None)
+    elif re.search(r"(conv|x_tm|x_cm)", ps):
+        tail = (b_entry,) + (None,) * (min(nd, 3) - 1)
+    elif re.search(r"enc$", ps):
+        tail = (b_entry, None, "model")
+    elif nd >= 4:                                        # (B,S,kv,hd)
+        kv, hd = leaf.shape[-2], leaf.shape[-1]
+        m = mesh.shape["model"]
+        if kv % m == 0:                                  # shard kv heads
+            tail = (b_entry, s_entry, "model", None)
+        elif hd % m == 0:                                # shard head_dim
+            tail = (b_entry, s_entry, None, "model")
+        else:
+            tail = (b_entry, s_entry, None, None)
+    elif nd == 3:                                        # (B,S,r) latent
+        tail = (b_entry, s_entry, "model")
+    else:
+        tail = (b_entry,) + (None,) * (nd - 1)
+    tail = tail[:nd]
+    spec = (None,) * (nd - len(tail)) + tail
+    return sanitize(spec, leaf.shape, mesh)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, *, batch: int,
+                    seq_shard: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf, mesh, batch=batch,
+                             seq_shard=seq_shard)),
+        cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

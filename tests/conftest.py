@@ -1,0 +1,35 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single-device CPU platform.  Only
+# src/repro/launch/dryrun.py (a separate process) forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core.predictor.gbdt import GBDTParams
+from repro.core.predictor.train import train_predictor
+from repro.core.predictor.dataset import sample_conv_ops, sample_linear_ops
+
+_FAST = GBDTParams(n_estimators=80, max_depth=7, learning_rate=0.15)
+
+
+@pytest.fixture(scope="session")
+def linear_train_ops():
+    return sample_linear_ops(900, seed=1)
+
+
+@pytest.fixture(scope="session")
+def conv_train_ops():
+    return sample_conv_ops(900, seed=1)
+
+
+@pytest.fixture(scope="session")
+def pixel5_linear_predictors(linear_train_ops):
+    gp = train_predictor(linear_train_ops, "pixel5", "gpu", whitebox=True,
+                         params=_FAST)
+    cp = train_predictor(linear_train_ops, "pixel5", "cpu3", whitebox=False,
+                         params=_FAST)
+    return cp, gp

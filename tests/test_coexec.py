@@ -1,0 +1,65 @@
+"""Tests for the TPU-native co-execution layer (core/coexec.py).
+
+The shard_map path needs >1 device, so it runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (kept out of this process
+on purpose — see conftest.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coexec import SplitPlan, throughput_split
+
+
+@settings(max_examples=50, deadline=None)
+@given(c_out=st.integers(8, 8192),
+       share=st.floats(0.0, 1.0),
+       align=st.sampled_from([4, 8, 16]))
+def test_throughput_split_invariants(c_out, share, align):
+    plan = throughput_split(c_out, share, align=align)
+    assert plan.c_fast + plan.c_slow == c_out
+    assert 0 <= plan.c_fast <= c_out
+    assert plan.c_pad >= max(plan.c_fast, plan.c_slow)
+    assert plan.c_pad % align == 0
+
+
+def test_split_plan_pad_is_minimal():
+    p = SplitPlan(c_out=100, c_fast=60, align=8)
+    assert p.c_pad == 64        # ceil(60/8)*8
+
+
+_SUBPROCESS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.coexec import (coexec_matmul, coexec_mesh, pack_weights,
+                                   throughput_split, coexec_linear_ref)
+    assert len(jax.devices()) == 8
+    mesh = coexec_mesh()
+    rng = np.random.default_rng(0)
+    for c_out, share in [(96, 0.5), (200, 0.8), (513, 0.3), (64, 1.0),
+                         (64, 0.0)]:
+        x = jnp.asarray(rng.normal(size=(17, 40)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(40, c_out)), jnp.float32)
+        plan = throughput_split(c_out, share)
+        y = coexec_matmul(x, pack_weights(w, plan), plan, mesh)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(coexec_linear_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+    print("COEXEC_OK")
+""")
+
+
+def test_coexec_matmul_matches_reference_on_8_virtual_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROG], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "COEXEC_OK" in out.stdout

@@ -1,0 +1,118 @@
+"""Unit + property tests for the mobile-platform performance models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simulator import (DEVICES, cpu_latency_us, dispatch_for,
+                                  gpu_latency_us, select_conv_kernel,
+                                  true_latency_us, measure_latency_us)
+from repro.core.simulator.gpu_model import (KERNEL_CONV_CONSTANT,
+                                            KERNEL_CONV_GENERIC,
+                                            KERNEL_CONV_WINOGRAD)
+from repro.core.types import ConvOp, LinearOp
+
+DEV_NAMES = sorted(DEVICES)
+
+
+# ---------------------------------------------------------------- invariants
+dims = st.integers(min_value=1, max_value=4096)
+small_dims = st.integers(min_value=1, max_value=512)
+
+
+@settings(max_examples=60, deadline=None)
+@given(L=small_dims, c_in=dims, c_out=dims,
+       dev=st.sampled_from(DEV_NAMES),
+       threads=st.integers(min_value=1, max_value=3))
+def test_latency_positive_and_finite(L, c_in, c_out, dev, threads):
+    op = LinearOp(L, c_in, c_out)
+    g = gpu_latency_us(op, DEVICES[dev])
+    c = cpu_latency_us(op, DEVICES[dev], threads)
+    assert np.isfinite(g) and g > 0
+    assert np.isfinite(c) and c > 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(L=small_dims, c_in=dims, c_out=st.integers(64, 2048),
+       dev=st.sampled_from(DEV_NAMES))
+def test_cpu_latency_monotone_in_flops_scale(L, c_in, c_out, dev):
+    """CPU model: 4x the output channels should not be cheaper."""
+    t1 = cpu_latency_us(LinearOp(L, c_in, c_out), DEVICES[dev], 2)
+    t4 = cpu_latency_us(LinearOp(L, c_in, 4 * c_out), DEVICES[dev], 2)
+    assert t4 >= t1
+
+
+@settings(max_examples=40, deadline=None)
+@given(L=small_dims, c_in=dims, c_out=dims, dev=st.sampled_from(DEV_NAMES))
+def test_more_threads_never_slower_much(L, c_in, c_out, dev):
+    """3 threads may lose to 1 only by the small scheduling overhead."""
+    op = LinearOp(L, c_in, c_out)
+    t1 = cpu_latency_us(op, DEVICES[dev], 1)
+    t3 = cpu_latency_us(op, DEVICES[dev], 3)
+    assert t3 <= t1 + 50.0
+
+
+def test_measurement_noise_is_reproducible():
+    op = LinearOp(50, 768, 3072)
+    a = measure_latency_us(op, "pixel5", "gpu", seed=3)
+    b = measure_latency_us(op, "pixel5", "gpu", seed=3)
+    c = measure_latency_us(op, "pixel5", "gpu", seed=4)
+    assert a == b
+    assert a != c
+    assert abs(a / true_latency_us(op, "pixel5", "gpu") - 1) < 0.15
+
+
+# ------------------------------------------------------- paper's phenomena
+def test_fig2_cpu_beats_gpu_for_small_cout_oneplus11():
+    """Fig. 2: CPU(3) wins for small C_out, GPU for large (crossover)."""
+    small = LinearOp(50, 3072, 128)
+    large = LinearOp(50, 3072, 1536)
+    assert (true_latency_us(small, "oneplus11", "cpu3")
+            < true_latency_us(small, "oneplus11", "gpu"))
+    assert (true_latency_us(large, "oneplus11", "gpu")
+            < true_latency_us(large, "oneplus11", "cpu3"))
+
+
+def test_fig5_gpu_latency_spikes_exist():
+    """Fig. 5: some C_out in [2048, 2560] is >=1.3x slower than a larger
+    neighbour (heuristic workgroup miss)."""
+    lat = {c: true_latency_us(LinearOp(50, 768, c), "oneplus11", "gpu")
+           for c in range(2048, 2561, 4)}
+    spikes = [(c1, c2) for c1 in lat for c2 in lat
+              if c2 > c1 and lat[c1] > 1.3 * lat[c2]]
+    assert spikes, "no workgroup-heuristic latency spikes"
+
+
+def test_fig6b_winograd_kernel_switch():
+    """Fig. 6b: 3x3 conv on (64,64,128) switches to winograd at C_out=128."""
+    dev = DEVICES["oneplus11"]
+    assert select_conv_kernel(ConvOp(64, 64, 128, 120, 3, 1), dev) \
+        != KERNEL_CONV_WINOGRAD
+    assert select_conv_kernel(ConvOp(64, 64, 128, 128, 3, 1), dev) \
+        == KERNEL_CONV_WINOGRAD
+
+
+def test_kernel_selection_constant_memory():
+    dev = DEVICES["oneplus11"]
+    tiny = ConvOp(64, 64, 16, 8, 1, 1)       # 512 B of weights
+    assert select_conv_kernel(tiny, dev) == KERNEL_CONV_CONSTANT
+    big = ConvOp(64, 64, 512, 512, 5, 1)
+    assert select_conv_kernel(big, dev) == KERNEL_CONV_GENERIC
+
+
+def test_workgroup_count_correlates_with_latency():
+    """Fig. 6a: workgroup count and latency are positively correlated."""
+    dev = DEVICES["oneplus11"]
+    wgs, lats = [], []
+    for c in range(256, 2049, 8):
+        op = LinearOp(50, 768, c)
+        wgs.append(dispatch_for(op, dev).wg_count)
+        lats.append(gpu_latency_us(op, dev))
+    r = np.corrcoef(wgs, lats)[0, 1]
+    assert r > 0.55, f"corr(wg_count, latency) = {r:.2f}"
+
+
+def test_sync_overhead_matches_paper_moto2022():
+    from repro.core.sync import SyncMechanism, sync_overhead_us
+    assert sync_overhead_us("moto2022", SyncMechanism.EVENT) == 162.0
+    assert sync_overhead_us("moto2022", SyncMechanism.SVM_POLL) == 7.0

@@ -1,0 +1,51 @@
+"""CI-scale dry-run: the full lower_one() path (shardings, lowering,
+compilation, roofline extraction) on an 8-virtual-device test mesh, in a
+subprocess so the 512-device production override never leaks here."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    from repro.launch.dryrun import lower_one
+    recs = []
+    for arch, shape, mp in [
+        ("rwkv6_1b6", "decode_32k", False),
+        ("rwkv6_1b6", "long_500k", True),
+        ("deepseek_v2_lite", "decode_32k", False),
+        ("gemma3_12b", "long_500k", False),
+        ("llama3_405b", "long_500k", False),     # must report a skip
+    ]:
+        rec = lower_one(arch, shape, multi_pod=mp, verbose=False,
+                        extra_tag="citest", test_mesh=True)
+        recs.append({k: rec.get(k) for k in
+                     ("arch", "shape", "status", "bottleneck",
+                      "hlo_flops")})
+    print("DRYRUN_JSON:" + json.dumps(recs))
+""")
+
+
+def test_lower_one_on_test_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    r = subprocess.run([sys.executable, "-c", _PROG], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("DRYRUN_JSON:")][0]
+    recs = json.loads(line[len("DRYRUN_JSON:"):])
+    by_key = {(x["arch"], x["shape"]): x for x in recs}
+    assert by_key[("rwkv6_1b6", "decode_32k")]["status"] == "ok"
+    assert by_key[("deepseek_v2_lite", "decode_32k")]["status"] == "ok"
+    assert by_key[("gemma3_12b", "long_500k")]["status"] == "ok"
+    assert by_key[("llama3_405b", "long_500k")]["status"] == "skipped"
+    for x in recs:
+        if x["status"] == "ok":
+            assert x["hlo_flops"] > 0

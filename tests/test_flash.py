@@ -1,0 +1,173 @@
+"""Flash (chunked online-softmax) attention vs naive oracles, including
+the MLA latent variants and hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.flash import (flash_decode, flash_full, flash_latent_full,
+                                flash_latent_decode)
+from repro.models.layers import _causal_mask, attention_scores
+
+
+def _naive(q, k, v, window=0):
+    t = q.shape[1]
+    return attention_scores(q, k, v, _causal_mask(t, t, window=window))
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([256, 512, 1024]),
+       h=st.sampled_from([4, 8]),
+       kv=st.sampled_from([1, 2, 4]),
+       window=st.sampled_from([0, 64]))
+def test_flash_full_matches_naive(t, h, kv, window):
+    if h % kv:
+        kv = 1
+    rng = np.random.default_rng(t + h + kv)
+    q = jnp.asarray(rng.normal(size=(2, t, h, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, t, kv, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, t, kv, 32)), jnp.float32)
+    got = flash_full(q, k, v, window=window, bq=128, bk=128)
+    want = _naive(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_decode_matches_naive():
+    rng = np.random.default_rng(0)
+    s = 1024
+    q = jnp.asarray(rng.normal(size=(2, 1, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, 2, 64)), jnp.float32)
+    for pos in (0, 100, s - 1):
+        got = flash_decode(q, k, v, jnp.int32(pos), bk=256)
+        mask = (jnp.arange(s) <= pos)[None, :]
+        want = attention_scores(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_flash_full_grad_is_finite():
+    """Backward through the checkpointed double scan must be stable."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 4, 32)), jnp.float32)
+
+    def f(q, k, v):
+        return flash_full(q, k, v, bq=64, bk=64).sum()
+
+    grads = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    for g in grads:
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_flash_latent_matches_dense_mla():
+    """flash_latent_full vs the dense absorbed-latent oracle."""
+    rng = np.random.default_rng(2)
+    b, t, h, r, rd = 2, 256, 4, 32, 16
+    q_lat = jnp.asarray(rng.normal(size=(b, t, h, r)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(b, t, h, rd)), jnp.float32)
+    c_kv = jnp.asarray(rng.normal(size=(b, t, r)), jnp.float32)
+    k_rope = jnp.asarray(rng.normal(size=(b, t, rd)), jnp.float32)
+    scale = 0.11
+    got = flash_latent_full(q_lat, q_rope, c_kv, k_rope, scale,
+                            bq=64, bk=64)
+    scores = (jnp.einsum("bthr,bsr->bhts", q_lat, c_kv)
+              + jnp.einsum("bthd,bsd->bhts", q_rope, k_rope)) * scale
+    mask = jnp.arange(t)[None, :] <= jnp.arange(t)[:, None]
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, -1)
+    want = jnp.einsum("bhts,bsr->bthr", probs, c_kv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+    got_d = flash_latent_decode(q_lat[:, -1:], q_rope[:, -1:], c_kv,
+                                k_rope, jnp.int32(t - 1), scale, bk=64)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want[:, -1:]),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv_chunked_wkv_matches_step_path():
+    """End-to-end: chunked-WKV forward vs the step recurrence on the same
+    reduced rwkv6 model (bf16 model tolerance)."""
+    from repro.models import build_model, get_config
+    import repro.models.ssm as ssm
+
+    cfg = get_config("rwkv6_1b6").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 128)),
+                       jnp.int32)
+    chunked, _ = m.forward(params, toks)
+    orig = ssm._WKV_CHUNK
+    try:
+        ssm._WKV_CHUNK = 10 ** 9          # force the step path
+        step, _ = m.forward(params, toks)
+    finally:
+        ssm._WKV_CHUNK = orig
+    a = np.asarray(chunked, np.float32)
+    b = np.asarray(step, np.float32)
+    assert np.abs(a - b).max() < 0.08     # bf16 accumulation noise
+    assert np.mean(np.abs(a - b) > 0.02) < 5e-3
+
+
+def test_ssd_chunked_matches_step_scan():
+    """Chunked SSD (EXPERIMENTS.md §Perf A) vs the per-timestep scan."""
+    import repro.models.ssm as ssm
+    rng = np.random.default_rng(0)
+    b, t, h, hd, n = 2, 512, 4, 16, 8
+    x = jnp.asarray(rng.normal(size=(b, t, h, hd)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, t, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, t, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, t, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 1.5, size=(h,)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(b, h, hd, n)), jnp.float32)
+
+    decay = jnp.exp(dt * a)
+
+    def step(s, inp):
+        x_t, b_t, c_t, dec_t, dt_t = inp
+        upd = dt_t[..., None, None] * (x_t[..., :, None]
+                                       * b_t[:, None, None, :])
+        s = dec_t[..., None, None] * s + upd
+        return s, jnp.einsum("bhdn,bn->bhd", s, c_t)
+
+    seq = (x.swapaxes(0, 1), bm.swapaxes(0, 1), cm.swapaxes(0, 1),
+           decay.swapaxes(0, 1), dt.swapaxes(0, 1))
+    sf_ref, ys = jax.lax.scan(step, h0, seq)
+    y_ref = ys.swapaxes(0, 1)
+    sf_chk, y_chk = ssm._ssd_chunked(x, bm, cm, dt, a, h0)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(sf_chk), np.asarray(sf_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv_chunked_exact_across_decay_regimes():
+    from repro.models.ssm import _wkv_chunked, _wkv_step
+    rng = np.random.default_rng(0)
+    for decay_lo in (0.55, 0.05, 0.95):
+        b, t, h, hd = 2, 128, 2, 16
+        r = jnp.asarray(rng.normal(size=(b, t, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, t, h, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, t, h, hd)), jnp.float32)
+        w = jnp.asarray(rng.uniform(decay_lo, 0.999, size=(b, t, h, hd)),
+                        jnp.float32)
+        u = jnp.asarray(rng.normal(size=(h, hd)) * 0.1, jnp.float32)
+        s0 = jnp.asarray(rng.normal(size=(b, h, hd, hd)), jnp.float32)
+
+        def step(s, inp):
+            return _wkv_step(s, inp, u)
+
+        seq = tuple(z.swapaxes(0, 1) for z in (r, k, v, w))
+        sf_ref, outs = jax.lax.scan(step, s0, seq)
+        o_ref = outs.swapaxes(0, 1)
+        sf_chk, o_chk = _wkv_chunked(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_ref),
+                                   rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(np.asarray(sf_chk), np.asarray(sf_ref),
+                                   rtol=5e-4, atol=5e-4)

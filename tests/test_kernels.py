@@ -1,0 +1,160 @@
+"""Per-kernel validation: interpret=True Pallas execution vs pure-jnp
+oracles, swept over shapes and dtypes (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (decode_attention_op,
+                                            decode_attention_ref)
+from repro.kernels.split_matmul import split_matmul_op, split_matmul_ref
+from repro.kernels.winograd_conv import conv2d_ref, winograd_conv2d
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ------------------------------------------------------------ split_matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,c0,width", [
+    (8, 64, 256, 0, 256),        # full width
+    (50, 768, 3072, 2480, 592),  # the paper's ViT running example split
+    (17, 100, 301, 96, 128),     # ragged everything
+    (128, 512, 1024, 512, 512),  # aligned halves
+    (1, 32, 64, 8, 40),          # tiny
+])
+def test_split_matmul_matches_ref(m, k, n, c0, width, dtype):
+    rng = np.random.default_rng(hash((m, k, n, c0, width)) % 2**32)
+    x = _rand(rng, (m, k), dtype)
+    w = _rand(rng, (k, n), dtype)
+    got = split_matmul_op(x, w, c0, width, bm=32, bn=128, bk=128,
+                          interpret=True)
+    want = split_matmul_ref(x, w, c0, width)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_split_matmul_covers_partition():
+    """c_fast + c_slow slices concatenate to the full product — the
+    paper's correctness invariant for co-execution."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (50, 768), jnp.float32)
+    w = _rand(rng, (768, 3072), jnp.float32)
+    c_fast = 2480
+    a = split_matmul_op(x, w, 0, c_fast, interpret=True)
+    b = split_matmul_op(x, w, c_fast, 3072 - c_fast, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([a, b], -1)),
+                               np.asarray(x @ w), rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,kv,hd,s,pos,window", [
+    (8, 8, 64, 256, 100, 0),      # MHA
+    (16, 2, 128, 512, 511, 0),    # GQA 8:1
+    (4, 1, 128, 300, 17, 0),      # ragged S
+    (16, 8, 256, 256, 200, 64),   # sliding window (gemma3-style)
+    (40, 8, 128, 1024, 700, 0),   # llama4-scout geometry
+])
+def test_decode_attention_matches_ref(h, kv, hd, s, pos, window, dtype):
+    rng = np.random.default_rng(hash((h, kv, s, pos)) % 2**32)
+    b = 2
+    q = _rand(rng, (b, h, hd), dtype)
+    k = _rand(rng, (b, s, kv, hd), dtype)
+    v = _rand(rng, (b, s, kv, hd), dtype)
+    got = decode_attention_op(q, k, v, jnp.int32(pos), window=window,
+                              bs=128, interpret=True)
+    want = decode_attention_op(q, k, v, jnp.int32(pos), window=window,
+                               use_kernel=False)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_masks_future():
+    """Values beyond pos must not influence the output."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 4, 64), jnp.float32)
+    k = _rand(rng, (1, 128, 4, 64), jnp.float32)
+    v = _rand(rng, (1, 128, 4, 64), jnp.float32)
+    pos = jnp.int32(40)
+    base = decode_attention_op(q, k, v, pos, bs=128, interpret=True)
+    k2 = k.at[:, 41:].set(999.0)
+    v2 = v.at[:, 41:].set(-999.0)
+    poisoned = decode_attention_op(q, k2, v2, pos, bs=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
+                               rtol=1e-6)
+
+
+# ----------------------------------------------------------- winograd_conv
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("b,h,w,cin,cout", [
+    (1, 8, 8, 32, 128),
+    (2, 16, 16, 64, 160),
+    (1, 15, 17, 32, 136),        # odd spatial dims
+])
+def test_winograd_conv_matches_direct(b, h, w, cin, cout, dtype):
+    rng = np.random.default_rng(hash((b, h, w, cin, cout)) % 2**32)
+    x = _rand(rng, (b, h, w, cin), dtype) * 0.3
+    wgt = _rand(rng, (3, 3, cin, cout), dtype) * 0.3
+    got = winograd_conv2d(x, wgt, interpret=True, bm=32, bn=128, bk=128)
+    want = conv2d_ref(x, wgt)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_winograd_flop_reduction_claim():
+    """F(2x2,3x3) does 16 multiplies per 4 outputs vs 36 direct — the 2.25x
+    reduction that motivates TFLite's kernel switch (Fig. 6b)."""
+    assert 36 / 16 == 2.25
+
+
+# --------------------------------------------------------------- ssd_chunk
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("b,t,h,hd,n,chunk", [
+    (1, 128, 2, 16, 8, 64),
+    (2, 256, 4, 16, 8, 64),
+    (1, 256, 2, 64, 64, 128),      # zamba2-like head geometry
+    (2, 512, 2, 32, 16, 256),
+])
+def test_ssd_chunk_kernel_matches_scan(b, t, h, hd, n, chunk, dtype):
+    from repro.kernels.ssd_chunk import ssd_chunk_op
+    rng = np.random.default_rng(hash((b, t, h, hd, n)) % 2**32)
+    x = _rand(rng, (b, t, h, hd), dtype)
+    bm = _rand(rng, (b, t, n), dtype)
+    cm = _rand(rng, (b, t, n), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, t, h)), dtype)
+    a = jnp.asarray(-rng.uniform(0.1, 1.5, size=(h,)), dtype)
+    s0 = _rand(rng, (b, h, hd, n), dtype)
+    sf_k, y_k = ssd_chunk_op(x, bm, cm, dt, a, s0, chunk=chunk,
+                             interpret=True)
+    sf_r, y_r = ssd_chunk_op(x, bm, cm, dt, a, s0, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(sf_k), np.asarray(sf_r),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_chunk_kernel_state_carries_across_chunks():
+    """Splitting T into more chunks must not change the result."""
+    from repro.kernels.ssd_chunk import ssd_chunk_op
+    rng = np.random.default_rng(7)
+    b, t, h, hd, n = 1, 256, 2, 16, 8
+    x = _rand(rng, (b, t, h, hd), jnp.float32)
+    bm = _rand(rng, (b, t, n), jnp.float32)
+    cm = _rand(rng, (b, t, n), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, t, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 1.5, size=(h,)), jnp.float32)
+    s0 = _rand(rng, (b, h, hd, n), jnp.float32)
+    sf1, y1 = ssd_chunk_op(x, bm, cm, dt, a, s0, chunk=256, interpret=True)
+    sf2, y2 = ssd_chunk_op(x, bm, cm, dt, a, s0, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(sf1), np.asarray(sf2),
+                               rtol=5e-4, atol=5e-4)

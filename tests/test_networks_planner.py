@@ -1,0 +1,42 @@
+"""Sanity tests for the end-to-end network graphs and the planner."""
+import numpy as np
+import pytest
+
+from repro.core.networks import NETWORKS
+from repro.core.types import ConvOp, LinearOp
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("vgg16", 29e9, 33e9),            # ~30.9 GFLOPs @224
+    ("resnet18", 3.2e9, 4.1e9),       # ~3.6
+    ("resnet34", 6.8e9, 7.9e9),       # ~7.3
+    ("inception_v3", 10e9, 14e9),     # ~11.4 @299
+])
+def test_network_flops_match_literature(name, lo, hi):
+    units = NETWORKS[name]()
+    fl = sum(u[1].flops for u in units if u[0] in ("conv", "linear"))
+    assert lo <= fl <= hi, f"{name}: {fl/1e9:.2f} GFLOPs"
+
+
+def test_networks_are_connected():
+    """Channel counts must chain: each conv/linear input channels match a
+    plausible producer (spot check: resnet34 strictly alternates)."""
+    for name, fn in NETWORKS.items():
+        units = [u for u in fn() if u[0] in ("conv", "linear")]
+        assert len(units) >= 10 or name == "vgg16"
+        for kind, op in units:
+            if kind == "conv":
+                assert op.C_in >= 1 and op.C_out >= 1
+                assert op.H_out >= 1 and op.W_out >= 1
+
+
+def test_planner_pool_stays_on_gpu(pixel5_linear_predictors):
+    """Pooling units contribute no CPU work and no sync overhead."""
+    from repro.core.planner import plan_network
+    cp, gp = pixel5_linear_predictors
+    units = [("linear", LinearOp(64, 512, 1024)), ("pool", 4 * 1024),
+             ("linear", LinearOp(64, 1024, 512))]
+    r = plan_network(units, cp, gp, threads=3)
+    assert len(r.decisions) == 2            # pools make no decisions
+    assert r.baseline_us > 0
+    assert r.end_to_end_speedup > 0.5

@@ -1,0 +1,76 @@
+"""Tests for the output-channel partitioner (paper Section 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.partitioner import (grid_search_partition, optimal_partition,
+                                    realized_latency_us, speedup_vs_gpu)
+from repro.core.sync import SyncMechanism
+from repro.core.types import LinearOp
+
+
+def test_split_covers_all_channels(pixel5_linear_predictors):
+    cp, gp = pixel5_linear_predictors
+    op = LinearOp(50, 768, 3072)
+    d = optimal_partition(op, cp, gp)
+    assert d.c_cpu + d.c_gpu == op.C_out
+    assert d.c_cpu >= 0 and d.c_gpu >= 0
+
+
+def test_partition_never_worse_than_exclusive_in_prediction(
+        pixel5_linear_predictors):
+    """The argmin includes both exclusive strategies, so the predicted total
+    can never exceed the predicted exclusive latencies."""
+    cp, gp = pixel5_linear_predictors
+    for c_out in (64, 640, 1000, 2048, 3072):
+        op = LinearOp(50, 768, c_out)
+        d = optimal_partition(op, cp, gp)
+        t_gpu = gp.predict([op])[0]
+        t_cpu = cp.predict([op])[0]
+        assert d.pred_total_us <= min(t_gpu, t_cpu) + 1e-6
+
+
+def test_grid_search_finds_good_splits():
+    op = LinearOp(50, 768, 3072)
+    g = grid_search_partition(op, "pixel5", 3)
+    s = speedup_vs_gpu(g, "pixel5", 3)
+    assert s > 1.5      # paper: ~1.9x-2.0x class on Pixel 5
+
+
+def test_predictor_close_to_grid_search(pixel5_linear_predictors):
+    cp, gp = pixel5_linear_predictors
+    rng = np.random.default_rng(2)
+    ops = [LinearOp(int(L), int(ci), int(co))
+           for L, ci, co in zip(rng.integers(16, 512, 6),
+                                rng.integers(256, 2048, 6),
+                                rng.integers(512, 3072, 6))]
+    sp = np.mean([speedup_vs_gpu(optimal_partition(o, cp, gp), "pixel5", 3)
+                  for o in ops])
+    sg = np.mean([speedup_vs_gpu(grid_search_partition(o, "pixel5", 3),
+                                 "pixel5", 3) for o in ops])
+    assert sp > 0.85 * sg, (sp, sg)   # Tab. 2: GBDT within ~6% of search
+
+
+def test_sync_mechanism_affects_decision_and_latency(
+        pixel5_linear_predictors):
+    """Tab. 4: with the 155 us event overhead co-execution loses its margin
+    on small ops; with SVM polling it wins."""
+    cp, gp = pixel5_linear_predictors
+    op = LinearOp(50, 768, 640)
+    t_svm = realized_latency_us(
+        optimal_partition(op, cp, gp, mechanism=SyncMechanism.SVM_POLL),
+        "pixel5", 3, mechanism=SyncMechanism.SVM_POLL)
+    t_evt = realized_latency_us(
+        optimal_partition(op, cp, gp, mechanism=SyncMechanism.EVENT),
+        "pixel5", 3, mechanism=SyncMechanism.EVENT)
+    assert t_svm <= t_evt
+
+
+@settings(max_examples=15, deadline=None)
+@given(c_out=st.integers(32, 4096))
+def test_candidate_grid_includes_exclusive_endpoints(c_out):
+    from repro.core.partitioner import _candidate_splits
+    cands = _candidate_splits(c_out, 8)
+    assert cands[0] == 0 and cands[-1] == c_out
+    assert np.all(np.diff(cands) > 0)

@@ -1,0 +1,77 @@
+"""Tests for the GBDT predictors and feature augmentation (Sections 3, 5.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.predictor import (GBDTParams, GBDTRegressor, mape,
+                                  measure_ops, sample_linear_ops,
+                                  train_predictor)
+from repro.core.predictor.features import whitebox_features, blackbox_features
+from repro.core.types import LinearOp
+
+_FAST = GBDTParams(n_estimators=80, max_depth=7, learning_rate=0.15)
+
+
+def test_gbdt_fits_nonlinear_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 10, size=(3000, 6))
+    y = np.sin(X[:, 0]) * X[:, 1] + 3.0 * (X[:, 2] > 5) + 0.3 * X[:, 3]
+    m = GBDTRegressor(_FAST).fit(X[:2500], y[:2500])
+    err = np.abs(m.predict(X[2500:]) - y[2500:]).mean()
+    assert err < 0.35 * np.abs(y).mean()
+
+
+def test_gbdt_predict_deterministic():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(500, 4))
+    y = X[:, 0] * 2 + X[:, 1] ** 2
+    m = GBDTRegressor(_FAST, seed=7).fit(X, y)
+    assert np.array_equal(m.predict(X), m.predict(X))
+
+
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(1, 256), c_in=st.integers(8, 2048),
+       c_out=st.integers(8, 4096))
+def test_feature_matrices_are_finite(L, c_in, c_out):
+    ops = [LinearOp(L, c_in, c_out)]
+    assert np.isfinite(blackbox_features(ops)).all()
+    assert np.isfinite(whitebox_features(ops, "pixel5")).all()
+
+
+def test_whitebox_beats_blackbox_on_gpu(linear_train_ops):
+    """The paper's central prediction claim (Tab. 4 ablation)."""
+    test = sample_linear_ops(250, seed=9)
+    y = measure_ops(test, "oneplus11", "gpu")
+    bb = train_predictor(linear_train_ops, "oneplus11", "gpu",
+                         whitebox=False, params=_FAST)
+    wb = train_predictor(linear_train_ops, "oneplus11", "gpu",
+                         whitebox=True, params=_FAST)
+    m_bb = mape(bb.predict(test), y)
+    m_wb = mape(wb.predict(test), y)
+    assert m_wb < m_bb, (m_wb, m_bb)
+    assert m_wb < 0.12          # Table 1 GPU MAPEs are 3.7%-4.4%
+
+
+def test_cpu_predictor_accuracy(linear_train_ops):
+    test = sample_linear_ops(250, seed=9)
+    p = train_predictor(linear_train_ops, "moto2022", "cpu2",
+                        whitebox=False, params=_FAST)
+    m = mape(p.predict(test), measure_ops(test, "moto2022", "cpu2"))
+    assert m < 0.12             # Table 1 CPU MAPEs are 2.4%-11.5%
+
+
+def test_predictor_save_load(tmp_path, pixel5_linear_predictors):
+    cp, gp = pixel5_linear_predictors
+    path = tmp_path / "gp.pkl"
+    gp.save(path)
+    from repro.core.predictor import LatencyPredictor
+    gp2 = LatencyPredictor.load(path)
+    ops = sample_linear_ops(20, seed=3)
+    assert np.allclose(gp.predict(ops), gp2.predict(ops))
+
+
+def test_hpo_runs_and_returns_predictor():
+    ops = sample_linear_ops(300, seed=5)
+    p = train_predictor(ops, "pixel4", "gpu", whitebox=True, hpo_trials=2)
+    assert p.predict(ops[:5]).shape == (5,)

@@ -1,0 +1,83 @@
+"""Tests for the sharding rules (spec construction + divisibility guard)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.rules import batch_spec, param_spec, sanitize
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+POD_MESH = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _leaf(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.bfloat16)
+
+
+def _spec_for(path_str, shape, mesh=MESH):
+    class _K:
+        def __init__(self, key):
+            self.key = key
+    path = tuple(_K(p) for p in path_str.split("/"))
+    return param_spec(path, _leaf(shape), mesh)
+
+
+def test_sanitize_drops_nondivisible_axes():
+    assert sanitize(("model", None), (20, 64), MESH) == P(None, None)
+    assert sanitize(("model", None), (32, 64), MESH) == P("model", None)
+    assert sanitize((None, "model"), (4, 128), MESH) == P(None, "model")
+
+
+def test_embed_sharded_on_vocab_and_dmodel():
+    spec = _spec_for("embed", (102400, 2048))
+    assert spec == P("model", "data")
+
+
+def test_attention_projection_2d_sharded():
+    spec = _spec_for("pattern/0/attn/wq", (16, 4096, 4096))
+    assert spec == P(None, "data", "model")       # stacked layer dim free
+
+
+def test_moe_expert_axis_on_model():
+    spec = _spec_for("pattern/0/ffn/w_gate", (26, 64, 2048, 1408))
+    assert spec == P(None, "model", "data", None)
+
+
+def test_awkward_head_count_degrades_gracefully():
+    # whisper: kv*hd = 1280 divides 16; a 20-dim leaf would not
+    spec = _spec_for("decoder/self_attn/wk", (32, 1280, 1280))
+    assert spec == P(None, "data", "model")
+    spec2 = _spec_for("decoder/self_attn/bq", (32, 20))
+    assert spec2 == P(None, None)                 # 20 % 16 != 0 -> replicate
+
+
+def test_norms_replicated():
+    assert _spec_for("pattern/0/ln1", (26, 2048)) == P(None, None)
+
+
+def test_batch_spec_handles_small_batches():
+    assert batch_spec(256, MESH) == P(("data",))
+    assert batch_spec(1, MESH) == P(None)
+    assert batch_spec(512, POD_MESH) == P(("pod", "data"))
+
+
+def test_param_shardings_cover_whole_model():
+    """Every leaf of a real model gets a valid NamedSharding on a real
+    (1, n) host mesh."""
+    from repro.models import build_model, get_config
+    from repro.sharding.rules import param_shardings
+    mesh = make_host_mesh()
+    cfg = get_config("deepseek_v2_lite").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    sh = param_shardings(params, mesh)
+    assert jax.tree.structure(sh) == jax.tree.structure(params)
