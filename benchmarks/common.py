@@ -20,9 +20,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.core.predictor import (LatencyPredictor, sample_conv_ops,   # noqa: E402
                                   sample_linear_ops, train_predictor)
 from repro.core.predictor.gbdt import GBDTParams                      # noqa: E402
+from repro.runtime import PlanCache                                   # noqa: E402
 
 REPORTS = Path(__file__).resolve().parents[1] / "reports"
 PRED_CACHE = REPORTS / "predictors"
+PLAN_CACHE_DIR = REPORTS / "plans"
+
+
+def plan_cache() -> PlanCache:
+    """Fresh handle on the shared on-disk plan cache (counters start at 0)."""
+    return PlanCache(PLAN_CACHE_DIR)
 
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
 N_TRAIN = 10_000 if FULL else 2_500

@@ -8,10 +8,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DEVICES, FULL, csv_row, get_predictor
-from repro.core.partitioner import (grid_search_partition, optimal_partition,
-                                    speedup_vs_gpu)
+from benchmarks.common import DEVICES, FULL, csv_row, get_predictor, plan_cache
+from repro.core.partitioner import speedup_vs_gpu_batch
 from repro.core.predictor.dataset import eval_conv_ops, eval_linear_ops
+from repro.runtime import grid_partition_ops_cached, partition_ops_cached
 
 _PAPER = {  # (device, kind, threads) -> (gbdt, search)
     ("pixel4", "linear", 3): (1.84, 1.92),
@@ -36,6 +36,7 @@ def _subsample(ops, n, seed):
 
 def run() -> list:
     rows = []
+    cache = plan_cache()
     # paper-scale eval sets: 2,039 linear / 2,051-class conv constructions
     pool = {"linear": _subsample(eval_linear_ops(), 2039, seed=0),
             "conv": eval_conv_ops()}
@@ -46,20 +47,21 @@ def run() -> list:
                 cp = get_predictor(dev, f"cpu{threads}", kind,
                                    whitebox=False)
                 ops_p = _subsample(pool[kind], N_PRED, seed=threads)
-                sp = np.mean([
-                    speedup_vs_gpu(optimal_partition(o, cp, gp), dev,
-                                   threads) for o in ops_p])
+                decs = partition_ops_cached(ops_p, cp, gp, cache=cache)
+                sp = np.mean(speedup_vs_gpu_batch(decs, dev, threads))
                 # score grid search on a subset of the SAME ops so the
                 # comparison is apples-to-apples
                 ops_g = ops_p[:N_GRID]
-                sg = np.mean([
-                    speedup_vs_gpu(grid_search_partition(o, dev, threads),
-                                   dev, threads) for o in ops_g])
+                gdecs = grid_partition_ops_cached(ops_g, dev, threads,
+                                                  cache=cache)
+                sg = np.mean(speedup_vs_gpu_batch(gdecs, dev, threads))
                 paper = _PAPER.get((dev, kind, threads), ("", ""))
                 rows.append(csv_row(
                     f"tab2_{dev}_{kind}_{threads}t", sp * 1000,
                     f"gbdt={sp:.2f}x,search={sg:.2f}x,"
                     f"paper={paper[0]}/{paper[1]}"))
+    print(f"# plan cache: {cache.hits} hits / {cache.misses} misses "
+          f"({cache.root})")
     return rows
 
 

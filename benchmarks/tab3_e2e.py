@@ -8,10 +8,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DEVICES, csv_row, get_predictor
+from benchmarks.common import DEVICES, csv_row, get_predictor, plan_cache
 from repro.core.networks import NETWORKS
-from repro.core.planner import plan_network
 from repro.core.predictor.train import MuxPredictor
+from repro.runtime import plan_network_cached
 
 _PAPER_E2E = {
     ("pixel4", "vgg16"): 1.14, ("pixel4", "resnet18"): 1.54,
@@ -28,6 +28,7 @@ _PAPER_E2E = {
 def run() -> list:
     rows = []
     threads = 3
+    cache = plan_cache()
     for dev in DEVICES:
         gp = MuxPredictor(get_predictor(dev, "gpu", "linear", whitebox=True),
                           get_predictor(dev, "gpu", "conv", whitebox=True))
@@ -35,13 +36,17 @@ def run() -> list:
             get_predictor(dev, f"cpu{threads}", "linear", whitebox=False),
             get_predictor(dev, f"cpu{threads}", "conv", whitebox=False))
         for name, fn in NETWORKS.items():
-            r = plan_network(fn(), cp, gp, threads=threads)
+            plan = plan_network_cached(fn(), cp, gp, threads=threads,
+                                       cache=cache)
+            r = plan.report()
             rows.append(csv_row(
                 f"tab3_{dev}_{name}", r.end_to_end_us,
                 f"base_ms={r.baseline_us/1e3:.1f},"
                 f"ind={r.individual_speedup:.2f}x,"
                 f"e2e={r.end_to_end_speedup:.2f}x,"
                 f"paper_e2e={_PAPER_E2E[(dev, name)]}"))
+    print(f"# plan cache: {cache.hits} hits / {cache.misses} misses "
+          f"({cache.root})")
     return rows
 
 

@@ -17,10 +17,10 @@ ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
 from repro.core.networks import NETWORKS                   # noqa: E402
-from repro.core.planner import plan_network                # noqa: E402
 from repro.core.predictor import (sample_conv_ops,         # noqa: E402
                                   sample_linear_ops, train_predictor)
 from repro.core.predictor.train import MuxPredictor        # noqa: E402
+from repro.runtime import PlanCache, plan_network_cached   # noqa: E402
 
 
 def part1():
@@ -33,7 +33,12 @@ def part1():
     cp = MuxPredictor(
         train_predictor(lt, dev, f"cpu{threads}", whitebox=False),
         train_predictor(ct, dev, f"cpu{threads}", whitebox=False))
-    r = plan_network(NETWORKS["resnet18"](), cp, gp, threads=threads)
+    cache = PlanCache(ROOT / "reports" / "plans")
+    plan = plan_network_cached(NETWORKS["resnet18"](), cp, gp,
+                               threads=threads, cache=cache)
+    r = plan.report()
+    print(f"plan cache {'HIT' if cache.hits else 'MISS (compiled)'} "
+          f"(key {plan.key})")
     print(f"baseline (GPU only): {r.baseline_us/1e3:.1f} ms")
     print(f"co-exec individual:  {r.individual_us/1e3:.1f} ms "
           f"({r.individual_speedup:.2f}x)")

@@ -91,7 +91,13 @@ def coexec_matmul(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
         # w_l: (1, C_in, c_pad) — this group's slice
         return (x_l @ w_l[0])[None]          # (1, L, c_pad)
 
-    y = jax.shard_map(
+    # jax.shard_map graduated from jax.experimental in newer releases;
+    # support both spellings.
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:
+        from jax.experimental.shard_map import shard_map
+
+    y = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(COEXEC_AXIS, None, "lane")),
         out_specs=P(COEXEC_AXIS, None, "lane"),
@@ -99,9 +105,15 @@ def coexec_matmul(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
 
     if not gather:
         return y
-    # materialize the combined output — the paper's synchronization point
-    return jnp.concatenate([y[0, :, :plan.c_fast], y[1, :, :plan.c_slow]],
-                           axis=-1)
+    # materialize the combined output — the paper's synchronization point.
+    # Reshard each group's slice to replicated first: concatenating slices
+    # that are still lane-sharded miscompiles on some jax releases (values
+    # double through the partitioner), and the gather IS the sync point, so
+    # an explicit reshard is the honest lowering.
+    rep = NamedSharding(mesh, P())
+    y_fast = jax.device_put(y[0, :, :plan.c_fast], rep)
+    y_slow = jax.device_put(y[1, :, :plan.c_slow], rep)
+    return jnp.concatenate([y_fast, y_slow], axis=-1)
 
 
 def coexec_linear_ref(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -6,16 +6,24 @@ over a channel grid, where the latency terms come either from trained
 predictors (the deployable path — "3-4 ms per operation, offline") or from
 noisy measurements (the grid-search oracle the paper uses as its upper
 bound, Table 2).
+
+Planning is vectorized: the `*_batch` functions featurize and score every
+candidate split of every op in a handful of batched
+`LatencyPredictor.predict` / `measure_latency_us_batch` calls, and the
+single-op entry points are thin wrappers over them.  Decisions are
+bit-identical to scoring each candidate in its own call — predictions and
+measurements are per-row, so batch composition cannot change the argmin.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.predictor.train import LatencyPredictor, measure_ops
-from repro.core.simulator.measure import measure_latency_us
+from repro.core.simulator.measure import (measure_latency_us,
+                                          measure_latency_us_batch)
 from repro.core.sync import SyncMechanism, sync_overhead_us
 from repro.core.types import Op
 
@@ -41,28 +49,87 @@ def _candidate_splits(c_out: int, step: int) -> np.ndarray:
     return cands
 
 
+def _candidate_grid(ops: Sequence[Op], step: int):
+    """Flatten every op's candidate splits into one grid.
+
+    Returns (gpu_ops, cpu_ops, c_gpu, c_cpu, spans) where spans[i] is the
+    half-open [lo, hi) slice of op i's candidates in the flat arrays.
+    """
+    gpu_ops: List[Op] = []
+    cpu_ops: List[Op] = []
+    c_gpu_parts: List[np.ndarray] = []
+    c_cpu_parts: List[np.ndarray] = []
+    spans: List[Tuple[int, int]] = []
+    for op in ops:
+        c_gpu = _candidate_splits(op.C_out, step)
+        c_cpu = op.C_out - c_gpu
+        spans.append((len(gpu_ops), len(gpu_ops) + len(c_gpu)))
+        gpu_ops.extend(op.with_cout(int(c)) for c in c_gpu)
+        cpu_ops.extend(op.with_cout(int(c)) for c in c_cpu)
+        c_gpu_parts.append(c_gpu)
+        c_cpu_parts.append(c_cpu)
+    c_gpu_all = np.concatenate(c_gpu_parts) if c_gpu_parts else np.empty(0, int)
+    c_cpu_all = np.concatenate(c_cpu_parts) if c_cpu_parts else np.empty(0, int)
+    return gpu_ops, cpu_ops, c_gpu_all, c_cpu_all, spans
+
+
+def _decide(ops: Sequence[Op], t_gpu: np.ndarray, t_cpu: np.ndarray,
+            c_gpu: np.ndarray, c_cpu: np.ndarray, spans, overhead: float
+            ) -> List[PartitionDecision]:
+    coexec = (c_gpu > 0) & (c_cpu > 0)
+    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
+    decisions = []
+    for op, (lo, hi) in zip(ops, spans):
+        i = lo + int(np.argmin(total[lo:hi]))
+        decisions.append(PartitionDecision(
+            op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
+            pred_cpu_us=float(t_cpu[i]), pred_gpu_us=float(t_gpu[i]),
+            pred_total_us=float(total[i])))
+    return decisions
+
+
+def optimal_partition_batch(ops: Sequence[Op], cpu_pred: LatencyPredictor,
+                            gpu_pred: LatencyPredictor, *,
+                            mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                            step: int = 8) -> List[PartitionDecision]:
+    """Predictor-driven partitioning of many ops in two `predict` calls."""
+    ops = list(ops)
+    if not ops:
+        return []
+    device = gpu_pred.device
+    overhead = sync_overhead_us(device, mechanism)
+    gpu_ops, cpu_ops, c_gpu, c_cpu, spans = _candidate_grid(ops, step)
+    t_gpu = np.where(c_gpu > 0, gpu_pred.predict(gpu_ops), 0.0)
+    t_cpu = np.where(c_cpu > 0, cpu_pred.predict(cpu_ops), 0.0)
+    return _decide(ops, t_gpu, t_cpu, c_gpu, c_cpu, spans, overhead)
+
+
 def optimal_partition(op: Op, cpu_pred: LatencyPredictor,
                       gpu_pred: LatencyPredictor, *,
                       mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
                       step: int = 8) -> PartitionDecision:
     """Predictor-driven partitioning (the paper's deployable method)."""
-    device = gpu_pred.device
+    return optimal_partition_batch([op], cpu_pred, gpu_pred,
+                                   mechanism=mechanism, step=step)[0]
+
+
+def grid_search_partition_batch(ops: Sequence[Op], device: str, threads: int,
+                                *,
+                                mechanism: SyncMechanism =
+                                SyncMechanism.SVM_POLL,
+                                step: int = 8, seed: int = 0
+                                ) -> List[PartitionDecision]:
+    """Measurement-driven exhaustive search over many ops in two batched
+    measurement calls (zero-channel candidates measure as exactly 0)."""
+    ops = list(ops)
+    if not ops:
+        return []
     overhead = sync_overhead_us(device, mechanism)
-    c_gpu = _candidate_splits(op.C_out, step)
-    c_cpu = op.C_out - c_gpu
-
-    gpu_ops = [op.with_cout(int(c)) for c in c_gpu]
-    cpu_ops = [op.with_cout(int(c)) for c in c_cpu]
-    t_gpu = np.where(c_gpu > 0, gpu_pred.predict(gpu_ops), 0.0)
-    t_cpu = np.where(c_cpu > 0, cpu_pred.predict(cpu_ops), 0.0)
-
-    coexec = (c_gpu > 0) & (c_cpu > 0)
-    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
-    i = int(np.argmin(total))
-    return PartitionDecision(op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
-                             pred_cpu_us=float(t_cpu[i]),
-                             pred_gpu_us=float(t_gpu[i]),
-                             pred_total_us=float(total[i]))
+    gpu_ops, cpu_ops, c_gpu, c_cpu, spans = _candidate_grid(ops, step)
+    t_gpu = measure_latency_us_batch(gpu_ops, device, "gpu", seed=seed)
+    t_cpu = measure_latency_us_batch(cpu_ops, device, f"cpu{threads}",
+                                     seed=seed)
+    return _decide(ops, t_gpu, t_cpu, c_gpu, c_cpu, spans, overhead)
 
 
 def grid_search_partition(op: Op, device: str, threads: int, *,
@@ -70,48 +137,58 @@ def grid_search_partition(op: Op, device: str, threads: int, *,
                           step: int = 8, seed: int = 0) -> PartitionDecision:
     """Measurement-driven exhaustive search (the paper's oracle baseline;
     step 8 matches Section 5.3)."""
-    overhead = sync_overhead_us(device, mechanism)
-    backend_cpu = f"cpu{threads}"
-    c_gpu = _candidate_splits(op.C_out, step)
-    c_cpu = op.C_out - c_gpu
+    return grid_search_partition_batch([op], device, threads,
+                                       mechanism=mechanism, step=step,
+                                       seed=seed)[0]
 
-    t_gpu = np.array([measure_latency_us(op.with_cout(int(c)), device, "gpu",
-                                         seed=seed) if c else 0.0
-                      for c in c_gpu])
-    t_cpu = np.array([measure_latency_us(op.with_cout(int(c)), device,
-                                         backend_cpu, seed=seed) if c else 0.0
-                      for c in c_cpu])
-    coexec = (c_gpu > 0) & (c_cpu > 0)
-    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
-    i = int(np.argmin(total))
-    return PartitionDecision(op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
-                             pred_cpu_us=float(t_cpu[i]),
-                             pred_gpu_us=float(t_gpu[i]),
-                             pred_total_us=float(total[i]))
+
+def realized_latency_us_batch(decisions: Sequence[PartitionDecision],
+                              device: str, threads: int, *,
+                              mechanism: SyncMechanism =
+                              SyncMechanism.SVM_POLL,
+                              seed: int = 1) -> np.ndarray:
+    """Measured co-execution latencies of many decisions (fresh measurement
+    seed, so predictor-driven decisions are scored on unseen noise)."""
+    decisions = list(decisions)
+    if not decisions:
+        return np.empty(0)
+    gpu_ops = [d.op.with_cout(d.c_gpu) for d in decisions]
+    cpu_ops = [d.op.with_cout(d.c_cpu) for d in decisions]
+    t_gpu = measure_latency_us_batch(gpu_ops, device, "gpu", seed=seed)
+    t_cpu = measure_latency_us_batch(cpu_ops, device, f"cpu{threads}",
+                                     seed=seed)
+    overhead = sync_overhead_us(device, mechanism)
+    exclusive = np.array([d.exclusive for d in decisions])
+    return np.maximum(t_cpu, t_gpu) + np.where(exclusive, 0.0, overhead)
 
 
 def realized_latency_us(decision: PartitionDecision, device: str,
                         threads: int, *,
                         mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
                         seed: int = 1) -> float:
-    """Measured co-execution latency of a decision (fresh measurement seed,
-    so predictor-driven decisions are scored on unseen noise)."""
-    op = decision.op
-    t_gpu = measure_latency_us(op.with_cout(decision.c_gpu), device, "gpu",
-                               seed=seed) if decision.c_gpu else 0.0
-    t_cpu = measure_latency_us(op.with_cout(decision.c_cpu), device,
-                               f"cpu{threads}", seed=seed) \
-        if decision.c_cpu else 0.0
-    overhead = 0.0 if decision.exclusive \
-        else sync_overhead_us(device, mechanism)
-    return max(t_cpu, t_gpu) + overhead
+    """Measured co-execution latency of a decision."""
+    return float(realized_latency_us_batch([decision], device, threads,
+                                           mechanism=mechanism, seed=seed)[0])
+
+
+def speedup_vs_gpu_batch(decisions: Sequence[PartitionDecision], device: str,
+                         threads: int, *,
+                         mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                         seed: int = 1) -> np.ndarray:
+    """Paper's metric, batched: speedup of co-execution over GPU-only."""
+    decisions = list(decisions)
+    if not decisions:
+        return np.empty(0)
+    gpu_only = measure_latency_us_batch([d.op for d in decisions], device,
+                                        "gpu", seed=seed)
+    co = realized_latency_us_batch(decisions, device, threads,
+                                   mechanism=mechanism, seed=seed)
+    return gpu_only / co
 
 
 def speedup_vs_gpu(decision: PartitionDecision, device: str, threads: int, *,
                    mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
                    seed: int = 1) -> float:
     """Paper's metric: speedup of co-execution over GPU-only execution."""
-    gpu_only = measure_latency_us(decision.op, device, "gpu", seed=seed)
-    co = realized_latency_us(decision, device, threads, mechanism=mechanism,
-                             seed=seed)
-    return gpu_only / co
+    return float(speedup_vs_gpu_batch([decision], device, threads,
+                                      mechanism=mechanism, seed=seed)[0])

@@ -12,6 +12,11 @@ Runs the per-operation partitioner over a whole network graph (offline, as
     cache-coherent traffic through the shared memory) — this is the paper's
     observed "memory access overhead between layers" that makes end-to-end
     speedups slightly lower than per-op speedups.
+
+The whole network is planned in a fixed number of batched calls: one
+baseline measurement batch, two predictor batches covering every candidate
+split of every op, and two realized-latency measurement batches — no
+per-candidate (or per-op) Python loops on the scoring hot path.
 """
 from __future__ import annotations
 
@@ -21,11 +26,12 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 from repro.core.networks import Unit
-from repro.core.partitioner import (PartitionDecision, optimal_partition,
-                                    realized_latency_us)
+from repro.core.partitioner import (PartitionDecision,
+                                    optimal_partition_batch,
+                                    realized_latency_us_batch)
 from repro.core.predictor.train import LatencyPredictor
 from repro.core.simulator.devices import DEVICES
-from repro.core.simulator.measure import measure_latency_us
+from repro.core.simulator.measure import measure_latency_us_batch
 from repro.core.sync import SyncMechanism
 
 
@@ -55,16 +61,24 @@ def _pool_latency_us(device: str) -> float:
 def plan_network(units: Sequence[Unit], cpu_pred: LatencyPredictor,
                  gpu_pred: LatencyPredictor, *, threads: int,
                  mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
-                 seed: int = 1) -> PlanReport:
+                 step: int = 8, seed: int = 1) -> PlanReport:
     device = gpu_pred.device
     dev = DEVICES[device]
 
+    ops = [payload for kind, payload in units if kind != "pool"]
+    gpu_only = measure_latency_us_batch(ops, device, "gpu", seed=seed)
+    decisions = optimal_partition_batch(ops, cpu_pred, gpu_pred,
+                                        mechanism=mechanism, step=step)
+    t_co = realized_latency_us_batch(decisions, device, threads,
+                                     mechanism=mechanism, seed=seed)
+
+    # Accumulate in schedule order (identical float-add order to a unit-by-
+    # unit walk, so totals match the loop formulation exactly).
     baseline = 0.0
     individual = 0.0
     e2e = 0.0
-    decisions: List[PartitionDecision] = []
     prev_split_frac = 0.0       # fraction of channels on CPU in previous op
-
+    i = 0
     for kind, payload in units:
         if kind == "pool":
             t = _pool_latency_us(device)
@@ -74,22 +88,18 @@ def plan_network(units: Sequence[Unit], cpu_pred: LatencyPredictor,
             prev_split_frac = 0.0     # pooling runs wholly on GPU
             continue
         op = payload
-        gpu_only = measure_latency_us(op, device, "gpu", seed=seed)
-        baseline += gpu_only
+        baseline += float(gpu_only[i])
+        individual += float(t_co[i])
 
-        dec = optimal_partition(op, cpu_pred, gpu_pred, mechanism=mechanism)
-        decisions.append(dec)
-        t_co = realized_latency_us(dec, device, threads, mechanism=mechanism,
-                                   seed=seed)
-        individual += t_co
-
+        dec = decisions[i]
         split_frac = dec.c_cpu / max(1, op.C_out)
         # boundary traffic: activations crossing the CPU/GPU ownership
         # boundary between consecutive layers move through shared memory.
         crossing = abs(split_frac - prev_split_frac) * op.input_bytes
         boundary_us = crossing / (dev.cpu_mem_gbps * 1e3)
-        e2e += t_co + boundary_us
+        e2e += float(t_co[i]) + boundary_us
         prev_split_frac = split_frac
+        i += 1
 
     return PlanReport(device=device, threads=threads, baseline_us=baseline,
                       individual_us=individual, end_to_end_us=e2e,

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import hashlib
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -42,9 +42,29 @@ def true_latency_us(op: Op, device: str, backend: str) -> float:
 def measure_latency_us(op: Op, device: str, backend: str,
                        repeats: int = 5, seed: int = 0) -> float:
     """Noisy measurement: median of `repeats` jittered observations."""
-    base = true_latency_us(op, device, backend)
-    if base == 0.0:
-        return 0.0
-    rng = np.random.default_rng(_stable_seed(device, backend, op, seed))
-    obs = base * np.exp(rng.normal(0.0, _NOISE_SIGMA, size=repeats))
-    return float(np.median(obs))
+    return float(measure_latency_us_batch([op], device, backend,
+                                          repeats=repeats, seed=seed)[0])
+
+
+def measure_latency_us_batch(ops: Sequence[Op], device: str, backend: str,
+                             repeats: int = 5, seed: int = 0) -> np.ndarray:
+    """Batched measurement: one call for a whole candidate grid.
+
+    Bit-identical to calling `measure_latency_us` per op — each op keeps its
+    own stable noise stream (seeded by the op itself, so the same op measured
+    alone or inside any batch observes the same jitter) while the noise
+    application and median reduction are vectorized across the batch.
+    """
+    ops = list(ops)
+    base = np.array([true_latency_us(op, device, backend) for op in ops])
+    out = np.zeros(len(ops))
+    nz = np.nonzero(base)[0]
+    if nz.size == 0:
+        return out
+    noise = np.empty((nz.size, repeats))
+    for row, i in enumerate(nz):
+        rng = np.random.default_rng(_stable_seed(device, backend, ops[i],
+                                                 seed))
+        noise[row] = rng.normal(0.0, _NOISE_SIGMA, size=repeats)
+    out[nz] = np.median(base[nz, None] * np.exp(noise), axis=1)
+    return out

@@ -123,7 +123,11 @@ class HloCostWalker:
         for line in lines[1:]:
             dm = _DEF_RE.match(line)
             if dm:
-                syms[dm.group(1)] = dm.group(2)
+                # store only the instruction's RESULT type: the raw rhs also
+                # embeds the operand shapes inside op(...), which would make
+                # operand-byte lookups count an operand's own operands
+                om = _OP_RE.match(dm.group(2))
+                syms[dm.group(1)] = om.group(1) if om else dm.group(2)
         return syms
 
     # ------------------------------------------------------------ costing

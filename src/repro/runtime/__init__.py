@@ -1,0 +1,42 @@
+"""Compiled co-execution plans: plan once, serve many times.
+
+The paper's partitioner runs offline as part of model compilation; this
+package is the artifact layer that makes that real — `CoexecPlan` (the
+serialized schedule + provenance), `PlanCache` (on-disk persistence), and
+cached planning entry points that skip all predictor/simulator work on a
+warm hit.  CLI: `python -m repro.runtime.plan --help`.
+
+Exports resolve lazily (PEP 562) so `python -m repro.runtime.plan` does not
+pre-import the CLI module through the package and trip runpy's
+double-import warning.
+"""
+import importlib
+
+_EXPORTS = {
+    "PlanCache": "repro.runtime.cache",
+    "grid_partition_ops_cached": "repro.runtime.cache",
+    "partition_ops_cached": "repro.runtime.cache",
+    "plan_network_cached": "repro.runtime.cache",
+    "PLAN_SCHEMA_VERSION": "repro.runtime.plan",
+    "CoexecPlan": "repro.runtime.plan",
+    "PlanProvenance": "repro.runtime.plan",
+    "decision_from_json": "repro.runtime.plan",
+    "decision_to_json": "repro.runtime.plan",
+    "network_fingerprint": "repro.runtime.plan",
+    "op_from_json": "repro.runtime.plan",
+    "op_to_json": "repro.runtime.plan",
+    "plan_from_report": "repro.runtime.plan",
+    "predictor_checksum": "repro.runtime.plan",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,145 @@
+"""Persistent plan cache: compile once, execute many.
+
+`PlanCache` stores `CoexecPlan` JSON files under one directory, keyed by the
+plan's provenance digest.  The cached planning entry points below check the
+cache *before* touching the predictors or the simulator, so a warm hit
+performs zero `LatencyPredictor.predict` and zero `measure_latency_us`
+calls — repeated planning of the same (network, device, mechanism, threads,
+predictors) tuple costs one JSON read.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.core.networks import Unit
+from repro.core.partitioner import (PartitionDecision,
+                                    grid_search_partition_batch,
+                                    optimal_partition_batch)
+from repro.core.planner import plan_network
+from repro.core.sync import SyncMechanism
+from repro.core.types import Op
+from repro.runtime.plan import (PLANNER_GRID, PLANNER_PREDICTOR, CoexecPlan,
+                                PlanProvenance, build_schedule,
+                                network_fingerprint, plan_from_report,
+                                predictor_checksum)
+
+
+class PlanCache:
+    """On-disk cache of compiled co-execution plans.
+
+    One JSON file per provenance key; `hits`/`misses` count lookups since
+    construction (tests assert on them).  Corrupt or mismatched files are
+    treated as misses and overwritten, never trusted.
+    """
+
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        self.hits = 0
+        self.misses = 0
+
+    def path_for(self, provenance: PlanProvenance) -> Path:
+        return self.root / f"{provenance.key}.json"
+
+    def get(self, provenance: PlanProvenance) -> Optional[CoexecPlan]:
+        path = self.path_for(provenance)
+        if path.exists():
+            try:
+                plan = CoexecPlan.load(path)
+            except (ValueError, KeyError, TypeError):
+                plan = None
+            if plan is not None and plan.provenance == provenance:
+                self.hits += 1
+                return plan
+        self.misses += 1
+        return None
+
+    def put(self, plan: CoexecPlan) -> Path:
+        path = self.path_for(plan.provenance)
+        plan.save(path)
+        return path
+
+    def keys(self) -> List[str]:
+        if not self.root.is_dir():
+            return []
+        return sorted(p.stem for p in self.root.glob("*.json"))
+
+
+def plan_network_cached(units: Sequence[Unit], cpu_pred, gpu_pred, *,
+                        threads: int,
+                        mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                        step: int = 8, seed: int = 1,
+                        cache: PlanCache) -> CoexecPlan:
+    """End-to-end network planning through the cache.
+
+    Provenance (and therefore the cache key) covers the network graph, the
+    target (device, threads), the sync mechanism, the candidate-grid step,
+    the measurement seed, and a structural checksum of both predictors.
+    """
+    prov = PlanProvenance(
+        device=gpu_pred.device, threads=threads, mechanism=mechanism.value,
+        step=step, seed=seed,
+        network_fingerprint=network_fingerprint(units),
+        predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
+        planner=PLANNER_PREDICTOR)
+    hit = cache.get(prov)
+    if hit is not None:
+        return hit
+    report = plan_network(units, cpu_pred, gpu_pred, threads=threads,
+                          mechanism=mechanism, step=step, seed=seed)
+    plan = plan_from_report(units, report, mechanism=mechanism, step=step,
+                            seed=seed,
+                            pred_checksum=prov.predictor_checksum)
+    cache.put(plan)
+    return plan
+
+
+def _ops_as_units(ops: Sequence[Op]) -> List[Unit]:
+    from repro.core.types import LinearOp
+    return [("linear" if isinstance(op, LinearOp) else "conv", op)
+            for op in ops]
+
+
+def partition_ops_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
+                         mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                         step: int = 8,
+                         cache: PlanCache) -> List[PartitionDecision]:
+    """Predictor-driven partitioning of a bare op list through the cache
+    (the Table 2 sweeps); decisions come back in op order."""
+    units = _ops_as_units(ops)
+    prov = PlanProvenance(
+        device=gpu_pred.device, threads=0, mechanism=mechanism.value,
+        step=step, seed=0, network_fingerprint=network_fingerprint(units),
+        predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
+        planner=PLANNER_PREDICTOR)
+    hit = cache.get(prov)
+    if hit is not None:
+        return hit.decisions
+    decisions = optimal_partition_batch(ops, cpu_pred, gpu_pred,
+                                        mechanism=mechanism, step=step)
+    cache.put(CoexecPlan(provenance=prov,
+                         schedule=build_schedule(units, decisions)))
+    return decisions
+
+
+def grid_partition_ops_cached(ops: Sequence[Op], device: str, threads: int, *,
+                              mechanism: SyncMechanism =
+                              SyncMechanism.SVM_POLL,
+                              step: int = 8, seed: int = 0,
+                              cache: PlanCache) -> List[PartitionDecision]:
+    """Measurement-driven (oracle) partitioning through the cache; keyed by
+    planner="grid" with no predictor checksum (none is involved)."""
+    units = _ops_as_units(ops)
+    prov = PlanProvenance(
+        device=device, threads=threads, mechanism=mechanism.value,
+        step=step, seed=seed, network_fingerprint=network_fingerprint(units),
+        predictor_checksum="", planner=PLANNER_GRID)
+    hit = cache.get(prov)
+    if hit is not None:
+        return hit.decisions
+    decisions = grid_search_partition_batch(ops, device, threads,
+                                            mechanism=mechanism, step=step,
+                                            seed=seed)
+    cache.put(CoexecPlan(provenance=prov,
+                         schedule=build_schedule(units, decisions)))
+    return decisions

@@ -1,0 +1,356 @@
+"""Compiled co-execution plans.
+
+The paper runs predictor-driven partitioning "offline, as part of the
+compilation process" (3-4 ms per operation).  This module makes that story
+concrete: a `CoexecPlan` is the compiled artifact — the full per-op
+`PartitionDecision` schedule of a network plus the provenance needed to know
+when it is safe to reuse (device, threads, sync mechanism, candidate-grid
+step, network fingerprint, predictor checksum).  Plans serialize to JSON and
+round-trip exactly (floats survive via repr-shortest encoding).
+
+`python -m repro.runtime.plan --network resnet18 --device moto2022` compiles
+a plan from scratch (training small predictors on the analytic simulator)
+and stores it in an on-disk `PlanCache` (see runtime/cache.py); the second
+invocation is a pure cache hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.networks import Unit
+from repro.core.partitioner import PartitionDecision
+from repro.core.planner import PlanReport
+from repro.core.sync import SyncMechanism
+from repro.core.types import ConvOp, LinearOp, Op
+
+PLAN_SCHEMA_VERSION = 1
+
+#: planner identifiers recorded in provenance
+PLANNER_PREDICTOR = "predictor"      # GBDT-driven (deployable path)
+PLANNER_GRID = "grid"                # measurement-driven oracle
+
+
+# --------------------------------------------------------------- op codecs
+
+def op_to_json(op: Op) -> Dict[str, Any]:
+    if isinstance(op, LinearOp):
+        return {"kind": "linear", "L": op.L, "C_in": op.C_in,
+                "C_out": op.C_out}
+    return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
+            "C_in": op.C_in, "C_out": op.C_out, "K": op.K, "S": op.S}
+
+
+def op_from_json(d: Dict[str, Any]) -> Op:
+    if d["kind"] == "linear":
+        return LinearOp(L=d["L"], C_in=d["C_in"], C_out=d["C_out"])
+    if d["kind"] == "conv":
+        return ConvOp(H_in=d["H_in"], W_in=d["W_in"], C_in=d["C_in"],
+                      C_out=d["C_out"], K=d["K"], S=d["S"])
+    raise ValueError(f"unknown op kind {d['kind']!r}")
+
+
+def decision_to_json(dec: PartitionDecision) -> Dict[str, Any]:
+    return {"op": op_to_json(dec.op), "c_cpu": dec.c_cpu, "c_gpu": dec.c_gpu,
+            "pred_cpu_us": dec.pred_cpu_us, "pred_gpu_us": dec.pred_gpu_us,
+            "pred_total_us": dec.pred_total_us}
+
+
+def decision_from_json(d: Dict[str, Any]) -> PartitionDecision:
+    return PartitionDecision(op=op_from_json(d["op"]), c_cpu=d["c_cpu"],
+                             c_gpu=d["c_gpu"], pred_cpu_us=d["pred_cpu_us"],
+                             pred_gpu_us=d["pred_gpu_us"],
+                             pred_total_us=d["pred_total_us"])
+
+
+# ------------------------------------------------------------- provenance
+
+def network_fingerprint(units: Sequence[Unit]) -> str:
+    """Stable digest of a network's op graph (the plan's input contract)."""
+    canon = []
+    for kind, payload in units:
+        if kind == "pool":
+            canon.append(["pool", int(payload)])
+        else:
+            canon.append([kind, op_to_json(payload)])
+    blob = json.dumps(canon, sort_keys=True, separators=(",", ":"))
+    return hashlib.blake2b(blob.encode(), digest_size=12).hexdigest()
+
+
+def _hash_array(h, arr) -> None:
+    a = np.ascontiguousarray(arr)
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+
+
+def _hash_gbdt(h, model) -> None:
+    h.update(repr(dataclasses.astuple(model.params)).encode())
+    h.update(repr(model.base_).encode())
+    for edges in model.bin_edges_ or []:
+        _hash_array(h, edges)
+    for tree in model.trees:
+        _hash_array(h, tree.feature)
+        _hash_array(h, tree.threshold_bin)
+        _hash_array(h, tree.left)
+        _hash_array(h, tree.right)
+        _hash_array(h, tree.value)
+
+
+def predictor_checksum(*predictors) -> str:
+    """Structural digest of one or more (possibly Mux) latency predictors.
+
+    Two predictors trained from identical data/seeds hash identically across
+    processes, so warm plan caches survive restarts; any retraining that
+    changes a tree invalidates dependent plans.
+    """
+    h = hashlib.blake2b(digest_size=12)
+    for p in predictors:
+        if hasattr(p, "models"):                     # LatencyPredictor
+            h.update(f"{p.device}/{p.backend}/{p.whitebox}".encode())
+            for kern in sorted(p.models):
+                h.update(kern.encode())
+                _hash_gbdt(h, p.models[kern])
+        elif hasattr(p, "linear") and hasattr(p, "conv"):   # MuxPredictor
+            h.update(predictor_checksum(p.linear, p.conv).encode())
+        else:
+            raise TypeError(f"cannot checksum predictor {type(p).__name__}")
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanProvenance:
+    """Everything a cached plan's validity depends on.
+
+    A plan may be reused iff every field matches the request; the cache key
+    is a digest over all of them, so any change — different device, thread
+    count, sync mechanism, grid step, network graph, retrained predictors,
+    or schema bump — is a miss (see docs/ARCHITECTURE.md).
+    """
+
+    device: str
+    threads: int
+    mechanism: str                # SyncMechanism value
+    step: int
+    seed: int                     # measurement-noise seed used when planning
+    network_fingerprint: str
+    predictor_checksum: str
+    planner: str = PLANNER_PREDICTOR
+    schema_version: int = PLAN_SCHEMA_VERSION
+
+    @property
+    def key(self) -> str:
+        blob = json.dumps(dataclasses.asdict(self), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.blake2b(blob.encode(), digest_size=16).hexdigest()
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "PlanProvenance":
+        return PlanProvenance(**d)
+
+
+# ------------------------------------------------------------------- plan
+
+@dataclasses.dataclass
+class CoexecPlan:
+    """Compile-once / execute-many co-execution schedule.
+
+    `schedule` mirrors the network's unit list: pool units pass through as
+    `{"unit": "pool", "bytes": n}`, conv/linear units carry their
+    `PartitionDecision`.  The report fields are optional — plans compiled
+    from a bare op list (e.g. the Table 2 sweeps) have no end-to-end totals.
+    """
+
+    provenance: PlanProvenance
+    schedule: List[Dict[str, Any]]
+    baseline_us: Optional[float] = None
+    individual_us: Optional[float] = None
+    end_to_end_us: Optional[float] = None
+
+    # ---------------------------------------------------------- accessors
+    @property
+    def key(self) -> str:
+        return self.provenance.key
+
+    @property
+    def decisions(self) -> List[PartitionDecision]:
+        return [decision_from_json(e["decision"]) for e in self.schedule
+                if e["unit"] != "pool"]
+
+    @property
+    def units(self) -> List[Unit]:
+        out: List[Unit] = []
+        for e in self.schedule:
+            if e["unit"] == "pool":
+                out.append(("pool", e["bytes"]))
+            else:
+                out.append((e["unit"], op_from_json(e["decision"]["op"])))
+        return out
+
+    def report(self) -> Optional[PlanReport]:
+        if self.end_to_end_us is None:
+            return None
+        return PlanReport(device=self.provenance.device,
+                          threads=self.provenance.threads,
+                          baseline_us=self.baseline_us,
+                          individual_us=self.individual_us,
+                          end_to_end_us=self.end_to_end_us,
+                          decisions=self.decisions)
+
+    # ------------------------------------------------------------- codecs
+    def to_json(self) -> Dict[str, Any]:
+        return {"schema_version": self.provenance.schema_version,
+                "provenance": self.provenance.to_json(),
+                "schedule": self.schedule,
+                "report": {"baseline_us": self.baseline_us,
+                           "individual_us": self.individual_us,
+                           "end_to_end_us": self.end_to_end_us}}
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "CoexecPlan":
+        rep = d.get("report") or {}
+        return CoexecPlan(provenance=PlanProvenance.from_json(d["provenance"]),
+                          schedule=d["schedule"],
+                          baseline_us=rep.get("baseline_us"),
+                          individual_us=rep.get("individual_us"),
+                          end_to_end_us=rep.get("end_to_end_us"))
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=1)
+
+    @staticmethod
+    def loads(text: str) -> "CoexecPlan":
+        return CoexecPlan.from_json(json.loads(text))
+
+    def save(self, path: Path) -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.dumps())
+
+    @staticmethod
+    def load(path: Path) -> "CoexecPlan":
+        return CoexecPlan.loads(Path(path).read_text())
+
+
+def build_schedule(units: Sequence[Unit],
+                   decisions: Sequence[PartitionDecision]
+                   ) -> List[Dict[str, Any]]:
+    """Zip a unit list with its op decisions into the plan schedule."""
+    schedule: List[Dict[str, Any]] = []
+    it = iter(decisions)
+    for kind, payload in units:
+        if kind == "pool":
+            schedule.append({"unit": "pool", "bytes": int(payload)})
+        else:
+            schedule.append({"unit": kind,
+                             "decision": decision_to_json(next(it))})
+    return schedule
+
+
+def plan_from_report(units: Sequence[Unit], report: PlanReport, *,
+                     mechanism: SyncMechanism, step: int, seed: int,
+                     pred_checksum: str) -> CoexecPlan:
+    prov = PlanProvenance(device=report.device, threads=report.threads,
+                          mechanism=mechanism.value, step=step, seed=seed,
+                          network_fingerprint=network_fingerprint(units),
+                          predictor_checksum=pred_checksum,
+                          planner=PLANNER_PREDICTOR)
+    return CoexecPlan(provenance=prov,
+                      schedule=build_schedule(units, report.decisions),
+                      baseline_us=report.baseline_us,
+                      individual_us=report.individual_us,
+                      end_to_end_us=report.end_to_end_us)
+
+
+# --------------------------------------------------------------------- CLI
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    import time
+
+    # When executed as `python -m repro.runtime.plan` this file is the
+    # `__main__` module; route everything through the canonical package
+    # modules so all classes have a single identity.
+    from repro.core.networks import NETWORKS
+    from repro.core.predictor import (sample_conv_ops, sample_linear_ops,
+                                      train_predictor)
+    from repro.core.predictor.gbdt import GBDTParams
+    from repro.core.predictor.train import MuxPredictor
+    from repro.runtime.cache import PlanCache, plan_network_cached
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime.plan",
+        description="Compile (or fetch from cache) a co-execution plan.")
+    from repro.core.simulator.devices import DEVICES
+    ap.add_argument("--network", default="resnet18", choices=sorted(NETWORKS))
+    ap.add_argument("--device", default="moto2022",
+                    choices=sorted(DEVICES))
+    ap.add_argument("--threads", type=int, default=3)
+    ap.add_argument("--mechanism", default="svm_poll",
+                    choices=[m.value for m in SyncMechanism])
+    ap.add_argument("--cache-dir", default="reports/plans",
+                    help="on-disk PlanCache directory")
+    ap.add_argument("--out", default=None,
+                    help="also write the plan JSON to this path")
+    ap.add_argument("--samples", type=int, default=400,
+                    help="training ops per predictor (simulator-measured)")
+    ap.add_argument("--estimators", type=int, default=60,
+                    help="GBDT trees per predictor")
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    mech = SyncMechanism(args.mechanism)
+    t0 = time.time()
+    params = GBDTParams(n_estimators=args.estimators)
+    lt = sample_linear_ops(args.samples, seed=1)
+    ct = sample_conv_ops(args.samples, seed=1)
+    gp = MuxPredictor(
+        train_predictor(lt, args.device, "gpu", whitebox=True, params=params),
+        train_predictor(ct, args.device, "gpu", whitebox=True, params=params))
+    cp = MuxPredictor(
+        train_predictor(lt, args.device, f"cpu{args.threads}",
+                        whitebox=False, params=params),
+        train_predictor(ct, args.device, f"cpu{args.threads}",
+                        whitebox=False, params=params))
+    t_train = time.time() - t0
+
+    cache = PlanCache(Path(args.cache_dir))
+    t0 = time.time()
+    plan = plan_network_cached(NETWORKS[args.network](), cp, gp,
+                               threads=args.threads, mechanism=mech,
+                               seed=args.seed, cache=cache)
+    t_plan = time.time() - t0
+
+    status = "HIT" if cache.hits else "MISS (compiled)"
+    n_co = sum(1 for d in plan.decisions if not d.exclusive)
+    print(f"plan {args.network} on {args.device} "
+          f"(cpu{args.threads}, {mech.value}): cache {status}")
+    print(f"  predictors trained in {t_train:.1f}s, "
+          f"plan obtained in {t_plan*1e3:.0f} ms")
+    print(f"  key {plan.key} -> {cache.path_for(plan.provenance)}")
+    print(f"  baseline (GPU only): {plan.baseline_us/1e3:.1f} ms | "
+          f"end-to-end co-exec: {plan.end_to_end_us/1e3:.1f} ms "
+          f"({plan.baseline_us/plan.end_to_end_us:.2f}x)")
+    print(f"  {n_co}/{len(plan.decisions)} ops co-executed")
+    if args.out:
+        plan.save(Path(args.out))
+        print(f"  wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:     # e.g. `... | head` closed the pipe
+        import os
+        import sys
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        raise SystemExit(0)

@@ -5,17 +5,25 @@ with prompts, get packed into a fixed batch, prefilled once, then decoded
 step-by-step with greedy/temperature sampling until max tokens.  The same
 `prefill`/`decode_step` functions are what the dry-run lowers at production
 shapes.
+
+An engine can be constructed with a compiled `CoexecPlan`
+(repro.runtime): the plan is validated lightly and exposed as
+`engine.coexec_plan`, so a deployment ships the offline partitioning
+artifact alongside the model instead of re-planning at serving time.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+
+if TYPE_CHECKING:
+    from repro.runtime.plan import CoexecPlan
 
 
 @dataclasses.dataclass
@@ -35,13 +43,18 @@ class Completion:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, model, params, *,
-                 max_batch: int = 4, max_len: int = 128, seed: int = 0):
+                 max_batch: int = 4, max_len: int = 128, seed: int = 0,
+                 coexec_plan: Optional["CoexecPlan"] = None):
         self.cfg = cfg
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.rng = jax.random.PRNGKey(seed)
+        if coexec_plan is not None and not hasattr(coexec_plan, "provenance"):
+            raise TypeError("coexec_plan must be a repro.runtime CoexecPlan "
+                            f"(got {type(coexec_plan).__name__})")
+        self.coexec_plan = coexec_plan
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
 

@@ -5,6 +5,9 @@ import sys
 # benches must see the real single-device CPU platform.  Only
 # src/repro/launch/dryrun.py (a separate process) forces 512 host devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the tests dir itself, so `from hypothesis_fallback import ...` resolves
+# regardless of pytest's import mode
+sys.path.insert(0, os.path.dirname(__file__))
 
 import numpy as np
 import pytest

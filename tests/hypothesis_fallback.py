@@ -1,0 +1,81 @@
+"""Minimal stand-in for `hypothesis` so property tests still run without it.
+
+The real library is preferred (install via `pip install -e .[dev]`); when it
+is absent, test modules fall back to this shim:
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from hypothesis_fallback import given, settings, st
+
+The shim covers exactly the strategy surface this repo uses — `integers`,
+`floats`, `sampled_from` — and replays a fixed number of deterministically
+drawn examples per test (no shrinking, no database).  It is a graceful
+degradation, not a replacement: coverage is random-but-fixed rather than
+adversarial.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def _integers(min_value=None, max_value=None):
+    lo = 0 if min_value is None else int(min_value)
+    hi = lo + 1000 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def _floats(min_value=0.0, max_value=1.0):
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+st = types.SimpleNamespace(integers=_integers, floats=_floats,
+                           sampled_from=_sampled_from)
+
+
+def given(**strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0x5EED)
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                drawn = {name: s.sample(rng)
+                         for name, s in strategies.items()}
+                fn(*args, **{**kwargs, **drawn})
+
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper._is_fallback_property_test = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

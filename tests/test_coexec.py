@@ -11,8 +11,11 @@ import textwrap
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # graceful fallback, see hypothesis_fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.coexec import SplitPlan, throughput_split
 

@@ -1,8 +1,11 @@
 """Unit + property tests for the mobile-platform performance models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # graceful fallback, see hypothesis_fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.simulator import (DEVICES, cpu_latency_us, dispatch_for,
                                   gpu_latency_us, select_conv_kernel,

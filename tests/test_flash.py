@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # graceful fallback, see hypothesis_fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.models.flash import (flash_decode, flash_full, flash_latent_full,
                                 flash_latent_decode)

@@ -1,8 +1,11 @@
 """Tests for the output-channel partitioner (paper Section 2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # graceful fallback, see hypothesis_fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.partitioner import (grid_search_partition, optimal_partition,
                                     realized_latency_us, speedup_vs_gpu)

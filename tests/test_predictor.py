@@ -1,8 +1,11 @@
 """Tests for the GBDT predictors and feature augmentation (Sections 3, 5.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # graceful fallback, see hypothesis_fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.predictor import (GBDTParams, GBDTRegressor, mape,
                                   measure_ops, sample_linear_ops,

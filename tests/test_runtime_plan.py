@@ -1,0 +1,295 @@
+"""Tests for the compiled co-execution plan subsystem (repro.runtime).
+
+Covers: CoexecPlan JSON round-trip, PlanCache hit/miss/invalidation on
+provenance changes, the zero-work guarantee on a warm hit, and exact
+equivalence of the vectorized planners with the seed's per-candidate loop
+formulation (reimplemented here as the reference).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.networks import NETWORKS
+from repro.core.partitioner import (PartitionDecision, _candidate_splits,
+                                    grid_search_partition,
+                                    optimal_partition_batch)
+from repro.core.planner import plan_network
+from repro.core.predictor import sample_conv_ops, sample_linear_ops, \
+    train_predictor
+from repro.core.predictor.gbdt import GBDTParams
+from repro.core.predictor.train import LatencyPredictor, MuxPredictor
+from repro.core.simulator.devices import DEVICES
+from repro.core.simulator.measure import (measure_latency_us,
+                                          measure_latency_us_batch)
+from repro.core.sync import SyncMechanism, sync_overhead_us
+from repro.core.types import ConvOp, LinearOp
+from repro.runtime import (CoexecPlan, PlanCache, network_fingerprint,
+                           plan_network_cached, predictor_checksum)
+
+_FAST = GBDTParams(n_estimators=40, max_depth=6, learning_rate=0.2)
+
+
+def _small_units():
+    return [("conv", ConvOp(28, 28, 32, 64, 3, 1)),
+            ("pool", 4 * 14 * 14 * 64),
+            ("conv", ConvOp(14, 14, 64, 96, 3, 1)),
+            ("linear", LinearOp(1, 96, 128))]
+
+
+@pytest.fixture(scope="module")
+def mux_predictors():
+    lt = sample_linear_ops(250, seed=1)
+    ct = sample_conv_ops(250, seed=1)
+    dev = "moto2022"
+    gp = MuxPredictor(
+        train_predictor(lt, dev, "gpu", whitebox=True, params=_FAST),
+        train_predictor(ct, dev, "gpu", whitebox=True, params=_FAST))
+    cp = MuxPredictor(
+        train_predictor(lt, dev, "cpu3", whitebox=False, params=_FAST),
+        train_predictor(ct, dev, "cpu3", whitebox=False, params=_FAST))
+    return cp, gp
+
+
+# ------------------------------------------------------- serialization
+
+def test_plan_json_roundtrip(mux_predictors, tmp_path):
+    cp, gp = mux_predictors
+    cache = PlanCache(tmp_path)
+    plan = plan_network_cached(_small_units(), cp, gp, threads=3,
+                               cache=cache)
+    back = CoexecPlan.loads(plan.dumps())
+    assert back.provenance == plan.provenance
+    assert back.decisions == plan.decisions          # exact float equality
+    assert back.baseline_us == plan.baseline_us
+    assert back.individual_us == plan.individual_us
+    assert back.end_to_end_us == plan.end_to_end_us
+    assert back.units == _small_units()
+
+    path = tmp_path / "sub" / "plan.json"
+    plan.save(path)
+    assert CoexecPlan.load(path).decisions == plan.decisions
+    # the artifact is plain JSON with the documented top-level shape
+    doc = json.loads(path.read_text())
+    assert set(doc) == {"schema_version", "provenance", "schedule", "report"}
+
+
+def test_fingerprint_and_checksum_are_stable(mux_predictors):
+    cp, gp = mux_predictors
+    assert network_fingerprint(_small_units()) == \
+        network_fingerprint(_small_units())
+    assert network_fingerprint(_small_units()) != \
+        network_fingerprint(_small_units()[:-1])
+    assert predictor_checksum(cp, gp) == predictor_checksum(cp, gp)
+    assert predictor_checksum(cp) != predictor_checksum(gp)
+
+
+# --------------------------------------------------------------- cache
+
+def test_cache_miss_then_hit(mux_predictors, tmp_path):
+    cp, gp = mux_predictors
+    cache = PlanCache(tmp_path)
+    p1 = plan_network_cached(_small_units(), cp, gp, threads=3, cache=cache)
+    assert (cache.hits, cache.misses) == (0, 1)
+    p2 = plan_network_cached(_small_units(), cp, gp, threads=3, cache=cache)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert p2.decisions == p1.decisions
+    assert p2.end_to_end_us == p1.end_to_end_us
+    assert cache.keys() == [p1.key]
+
+
+def test_warm_hit_performs_zero_measure_or_predict_calls(
+        mux_predictors, tmp_path, monkeypatch):
+    cp, gp = mux_predictors
+    cache = PlanCache(tmp_path)
+    plan_network_cached(_small_units(), cp, gp, threads=3, cache=cache)
+
+    def _boom(*a, **k):
+        raise AssertionError("warm cache hit must not touch the "
+                             "simulator or the predictors")
+
+    # sever every scoring entry point: the predictor class and both the
+    # scalar and batched measurement functions in every importing module
+    monkeypatch.setattr(LatencyPredictor, "predict", _boom)
+    monkeypatch.setattr(MuxPredictor, "predict", _boom)
+    for mod in ("repro.core.simulator.measure", "repro.core.partitioner",
+                "repro.core.planner", "repro.core.predictor.train"):
+        m = sys.modules[mod]
+        for fn in ("measure_latency_us", "measure_latency_us_batch"):
+            if hasattr(m, fn):
+                monkeypatch.setattr(m, fn, _boom)
+
+    plan = plan_network_cached(_small_units(), cp, gp, threads=3,
+                               cache=cache)
+    assert cache.hits == 1
+    assert len(plan.decisions) == 3
+
+
+def test_candidate_step_is_forwarded_and_keyed(mux_predictors, tmp_path):
+    cp, gp = mux_predictors
+    units = [("conv", ConvOp(28, 28, 32, 100, 3, 1))]
+    cache = PlanCache(tmp_path)
+    p8 = plan_network_cached(units, cp, gp, threads=3, cache=cache)
+    p100 = plan_network_cached(units, cp, gp, threads=3, step=100,
+                               cache=cache)
+    # a step-100 grid over 100 channels is {0, 100}: exclusive only
+    assert all(d.exclusive for d in p100.decisions)
+    assert p100.provenance.step == 100
+    assert p8.key != p100.key
+
+
+def test_cache_invalidation_on_provenance_change(mux_predictors, tmp_path):
+    cp, gp = mux_predictors
+    cache = PlanCache(tmp_path)
+    plan_network_cached(_small_units(), cp, gp, threads=3, cache=cache)
+
+    # different thread count -> miss
+    plan_network_cached(_small_units(), cp, gp, threads=2, cache=cache)
+    # different sync mechanism -> miss
+    plan_network_cached(_small_units(), cp, gp, threads=3,
+                        mechanism=SyncMechanism.EVENT, cache=cache)
+    # different network -> miss
+    plan_network_cached(_small_units()[:-1], cp, gp, threads=3, cache=cache)
+    # retrained predictor (different data) -> different checksum -> miss
+    lt = sample_linear_ops(120, seed=9)
+    ct = sample_conv_ops(120, seed=9)
+    gp2 = MuxPredictor(
+        train_predictor(lt, "moto2022", "gpu", whitebox=True, params=_FAST),
+        train_predictor(ct, "moto2022", "gpu", whitebox=True, params=_FAST))
+    plan_network_cached(_small_units(), cp, gp2, threads=3, cache=cache)
+
+    assert cache.hits == 0
+    assert cache.misses == 5
+    assert len(cache.keys()) == 5
+
+    # every original request is now warm
+    plan_network_cached(_small_units(), cp, gp, threads=3, cache=cache)
+    assert cache.hits == 1
+
+
+# ------------------------------------------- seed-loop equivalence oracle
+
+def _seed_optimal_partition(op, cpu_pred, gpu_pred, *,
+                            mechanism=SyncMechanism.SVM_POLL, step=8):
+    """The seed's per-op implementation, kept verbatim as the oracle."""
+    device = gpu_pred.device
+    overhead = sync_overhead_us(device, mechanism)
+    c_gpu = _candidate_splits(op.C_out, step)
+    c_cpu = op.C_out - c_gpu
+    gpu_ops = [op.with_cout(int(c)) for c in c_gpu]
+    cpu_ops = [op.with_cout(int(c)) for c in c_cpu]
+    t_gpu = np.where(c_gpu > 0, gpu_pred.predict(gpu_ops), 0.0)
+    t_cpu = np.where(c_cpu > 0, cpu_pred.predict(cpu_ops), 0.0)
+    coexec = (c_gpu > 0) & (c_cpu > 0)
+    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
+    i = int(np.argmin(total))
+    return PartitionDecision(op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
+                             pred_cpu_us=float(t_cpu[i]),
+                             pred_gpu_us=float(t_gpu[i]),
+                             pred_total_us=float(total[i]))
+
+
+def _seed_grid_search(op, device, threads, *,
+                      mechanism=SyncMechanism.SVM_POLL, step=8, seed=0):
+    overhead = sync_overhead_us(device, mechanism)
+    backend_cpu = f"cpu{threads}"
+    c_gpu = _candidate_splits(op.C_out, step)
+    c_cpu = op.C_out - c_gpu
+    t_gpu = np.array([measure_latency_us(op.with_cout(int(c)), device, "gpu",
+                                         seed=seed) if c else 0.0
+                      for c in c_gpu])
+    t_cpu = np.array([measure_latency_us(op.with_cout(int(c)), device,
+                                         backend_cpu, seed=seed) if c else 0.0
+                      for c in c_cpu])
+    coexec = (c_gpu > 0) & (c_cpu > 0)
+    total = np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
+    i = int(np.argmin(total))
+    return PartitionDecision(op=op, c_cpu=int(c_cpu[i]), c_gpu=int(c_gpu[i]),
+                             pred_cpu_us=float(t_cpu[i]),
+                             pred_gpu_us=float(t_gpu[i]),
+                             pred_total_us=float(total[i]))
+
+
+@pytest.mark.parametrize("network", ["vgg16", "resnet18"])
+def test_vectorized_planning_matches_seed_loop(mux_predictors, network):
+    """Acceptance: batched planning is bit-identical to the seed loops."""
+    cp, gp = mux_predictors
+    units = NETWORKS[network]()
+    ops = [payload for kind, payload in units if kind != "pool"]
+
+    batched = optimal_partition_batch(ops, cp, gp)
+    looped = [_seed_optimal_partition(op, cp, gp) for op in ops]
+    assert batched == looped            # dataclass eq: exact ints + floats
+
+    report = plan_network(units, cp, gp, threads=3)
+    assert report.decisions == looped
+
+
+def test_vectorized_grid_search_matches_seed_loop():
+    ops = [LinearOp(50, 768, 640), LinearOp(8, 256, 1000),
+           ConvOp(28, 28, 64, 96, 3, 1), ConvOp(14, 14, 128, 130, 1, 1)]
+    for op in ops:
+        assert grid_search_partition(op, "pixel5", 3) == \
+            _seed_grid_search(op, "pixel5", 3)
+
+
+def test_batched_measurement_matches_scalar():
+    ops = [LinearOp(50, 768, 640), LinearOp(1, 16, 0),
+           ConvOp(28, 28, 64, 96, 3, 1)]
+    batch = measure_latency_us_batch(ops, "pixel5", "gpu", seed=3)
+    scalar = [measure_latency_us(op, "pixel5", "gpu", seed=3) for op in ops]
+    assert batch.tolist() == scalar
+    assert batch[1] == 0.0
+
+
+# --------------------------------------------------------- integrations
+
+def test_serving_engine_accepts_plan(mux_predictors, tmp_path):
+    from repro.serving.engine import ServingEngine
+
+    cp, gp = mux_predictors
+    cache = PlanCache(tmp_path)
+    plan = plan_network_cached(_small_units(), cp, gp, threads=3,
+                               cache=cache)
+
+    class _Model:                      # never traced: jit is lazy
+        @staticmethod
+        def prefill(params, toks, cache):
+            raise NotImplementedError
+
+        @staticmethod
+        def decode_step(params, tok, cache, pos):
+            raise NotImplementedError
+
+    eng = ServingEngine(cfg=None, model=_Model, params={},
+                        coexec_plan=plan)
+    assert eng.coexec_plan is plan
+    with pytest.raises(TypeError):
+        ServingEngine(cfg=None, model=_Model, params={},
+                      coexec_plan={"not": "a plan"})
+
+
+def test_plan_cli_cold_then_warm(tmp_path):
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    cmd = [sys.executable, "-m", "repro.runtime.plan",
+           "--network", "resnet18", "--device", "moto2022", "--threads", "3",
+           "--samples", "120", "--estimators", "25",
+           "--cache-dir", str(tmp_path),
+           "--out", str(tmp_path / "plan.json")]
+    cold = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert cold.returncode == 0, cold.stderr[-2000:]
+    assert "cache MISS" in cold.stdout
+    plan = CoexecPlan.load(tmp_path / "plan.json")
+    assert plan.provenance.device == "moto2022"
+    assert len(plan.decisions) > 0
+
+    warm = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert warm.returncode == 0, warm.stderr[-2000:]
+    assert "cache HIT" in warm.stdout
