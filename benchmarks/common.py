@@ -1,17 +1,27 @@
-"""Shared benchmark infrastructure: predictor training with disk cache.
+"""Shared benchmark infrastructure: predictor training with disk cache,
+plus machine-readable result reports.
 
 All paper benchmarks share one pool of trained GBDT predictors per
 (device, backend, op kind, whitebox) tuple, cached under reports/predictors
 so repeated benchmark runs are fast.  Scale knobs (--full) switch between
 a CI-sized run and the paper-scale dataset (12,500 configs per op kind).
+
+Every suite also writes a JSON report under reports/bench/<suite>.json
+(suite name, host device, git sha, parsed metric rows) so the perf
+trajectory is trackable across PRs: `bench_main` is the standalone-script
+entry point, and `benchmarks.run` calls `write_bench_report` per suite.
 """
 from __future__ import annotations
 
+import datetime
+import json
 import os
+import platform
+import subprocess
 import sys
 import time
 from pathlib import Path
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -22,9 +32,11 @@ from repro.core.predictor import (LatencyPredictor, sample_conv_ops,   # noqa: E
 from repro.core.predictor.gbdt import GBDTParams                      # noqa: E402
 from repro.runtime import PlanCache                                   # noqa: E402
 
-REPORTS = Path(__file__).resolve().parents[1] / "reports"
+ROOT = Path(__file__).resolve().parents[1]
+REPORTS = ROOT / "reports"
 PRED_CACHE = REPORTS / "predictors"
 PLAN_CACHE_DIR = REPORTS / "plans"
+BENCH_REPORTS = REPORTS / "bench"
 
 
 def plan_cache() -> PlanCache:
@@ -69,3 +81,59 @@ def get_predictor(device: str, backend: str, kind: str,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+# ------------------------------------------------------- JSON reporting
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def parse_rows(rows: List[str]) -> List[Dict[str, object]]:
+    """`name,us_per_call,derived` CSV rows -> metric dicts (the derived
+    field may itself contain commas, hence maxsplit)."""
+    out = []
+    for row in rows:
+        name, us, derived = str(row).split(",", 2)
+        out.append({"name": name, "us_per_call": float(us),
+                    "derived": derived})
+    return out
+
+
+def write_bench_report(suite: str, rows: List[str], *,
+                       extra: Optional[Dict[str, object]] = None) -> Path:
+    """Persist one suite's results as reports/bench/<suite>.json."""
+    doc = {
+        "suite": suite,
+        "device": platform.processor() or platform.machine(),
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "git_sha": _git_sha(),
+        "generated_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "full": FULL,
+        "metrics": parse_rows(rows),
+    }
+    if extra:
+        doc.update(extra)
+    BENCH_REPORTS.mkdir(parents=True, exist_ok=True)
+    path = BENCH_REPORTS / f"{suite}.json"
+    path.write_text(json.dumps(doc, indent=1))
+    return path
+
+
+def bench_main(suite: str, run_fn, *,
+               extra: Optional[Dict[str, object]] = None) -> List[str]:
+    """Standalone-script entry point: print CSV rows AND write the JSON
+    report (used by every tab*/fig* script's __main__)."""
+    rows = [str(r) for r in run_fn()]
+    print("\n".join(rows))
+    path = write_bench_report(suite, rows, extra=extra)
+    print(f"# wrote {path.relative_to(ROOT)}")
+    return rows

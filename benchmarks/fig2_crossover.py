@@ -30,4 +30,5 @@ def run() -> list:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from benchmarks.common import bench_main
+    bench_main("fig2", run)

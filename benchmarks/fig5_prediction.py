@@ -32,4 +32,5 @@ def run() -> list:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from benchmarks.common import bench_main
+    bench_main("fig5", run)

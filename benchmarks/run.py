@@ -1,7 +1,9 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Set BENCH_FULL=1 for
-paper-scale datasets (slower); default is a reduced but representative run.
+Prints ``name,us_per_call,derived`` CSV rows and writes one JSON report
+per suite under reports/bench/ (see benchmarks.common.write_bench_report).
+Set BENCH_FULL=1 for paper-scale datasets (slower); default is a reduced
+but representative run.
 
     PYTHONPATH=src python -m benchmarks.run [--only tab2]
 """
@@ -38,17 +40,23 @@ def main() -> None:
     args = ap.parse_args()
     names = [args.only] if args.only else list(SUITES)
 
+    from benchmarks.common import write_bench_report
+
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.time()
         try:
-            for row in SUITES[name]():
+            rows = [str(r) for r in SUITES[name]()]
+            for row in rows:
                 print(row)
         except Exception as e:                       # noqa: BLE001
             print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")
             raise
-        print(f"{name}_wallclock,{(time.time()-t0)*1e6:.0f},seconds="
-              f"{time.time()-t0:.1f}")
+        wall = time.time() - t0
+        print(f"{name}_wallclock,{wall*1e6:.0f},seconds={wall:.1f}")
+        path = write_bench_report(name, rows,
+                                  extra={"wallclock_s": round(wall, 2)})
+        print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

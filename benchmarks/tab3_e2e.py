@@ -3,10 +3,13 @@ GPU + 3 CPU threads co-execution.
 
 Paper headline: up to 1.67x / 1.79x / 1.27x / 1.27x average e2e speedups on
 Pixel 4 / Pixel 5 / Moto 2022 / OnePlus 11.
+
+`--execute` additionally lowers one cached plan through
+`repro.runtime.executor.PlanExecutor` and reports executed-vs-predicted
+latency per op (predictions model the phone, execution runs on this host —
+the per-op ratio's spread is the fidelity signal).
 """
 from __future__ import annotations
-
-import numpy as np
 
 from benchmarks.common import DEVICES, csv_row, get_predictor, plan_cache
 from repro.core.networks import NETWORKS
@@ -25,10 +28,12 @@ _PAPER_E2E = {
 }
 
 
-def run() -> list:
+def run(execute: bool = False, exec_device: str = "moto2022",
+        exec_network: str = "resnet18", chain: bool = True) -> list:
     rows = []
     threads = 3
     cache = plan_cache()
+    plans = {}
     for dev in DEVICES:
         gp = MuxPredictor(get_predictor(dev, "gpu", "linear", whitebox=True),
                           get_predictor(dev, "gpu", "conv", whitebox=True))
@@ -38,6 +43,7 @@ def run() -> list:
         for name, fn in NETWORKS.items():
             plan = plan_network_cached(fn(), cp, gp, threads=threads,
                                        cache=cache)
+            plans[(dev, name)] = plan
             r = plan.report()
             rows.append(csv_row(
                 f"tab3_{dev}_{name}", r.end_to_end_us,
@@ -47,8 +53,59 @@ def run() -> list:
                 f"paper_e2e={_PAPER_E2E[(dev, name)]}"))
     print(f"# plan cache: {cache.hits} hits / {cache.misses} misses "
           f"({cache.root})")
+    if execute:
+        rows += _execute_rows(plans[(exec_device, exec_network)],
+                              exec_device, exec_network, chain)
+    return rows
+
+
+def _execute_rows(plan, dev: str, name: str, chain: bool) -> list:
+    """Lower one cached plan into actual split execution; one row per op
+    (executed wall us vs the plan's predicted us) plus a summary row."""
+    from repro.runtime import PlanExecutor
+
+    exe = PlanExecutor(plan)
+    _, rep = exe.run(chain=chain, warmup=True)
+    rows = []
+    for t in rep.timings:
+        ratio = (f"{t.wall_us / t.pred_us:.1f}" if t.pred_us > 0
+                 else "na")                    # pool units carry no pred
+        rows.append(csv_row(
+            f"tab3_exec_{dev}_{name}_{t.index:02d}_{t.unit}", t.wall_us,
+            f"pred_us={t.pred_us:.1f},ratio={ratio},mode={t.mode},"
+            f"split={t.c_fast}/{t.c_slow},"
+            f"chained={int(t.chained_input)}"))
+    rows.append(csv_row(
+        f"tab3_exec_{dev}_{name}_total", rep.wall_us,
+        f"pred_us={rep.predicted_us:.1f},"
+        f"reshard={rep.reshard_points},elided={rep.elided},"
+        f"split_capable={int(rep.split_capable)}"))
+    print("# " + rep.fidelity_summary())
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+
+    from benchmarks.common import bench_main
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--execute", action="store_true",
+                    help="execute one cached plan and report per-op "
+                         "executed-vs-predicted latency")
+    ap.add_argument("--exec-device", default="moto2022", choices=DEVICES)
+    ap.add_argument("--exec-network", default="resnet18",
+                    choices=sorted(NETWORKS))
+    ap.add_argument("--no-chain", action="store_true",
+                    help="gather after every co-executed op")
+    args = ap.parse_args()
+    # --execute writes to a separate suite so plain tab3.json stays a
+    # stable row set for cross-PR tracking
+    suite = "tab3_exec" if args.execute else "tab3"
+    extra = ({"execute": True, "exec_device": args.exec_device,
+              "exec_network": args.exec_network,
+              "chain": not args.no_chain} if args.execute else None)
+    bench_main(suite, lambda: run(execute=args.execute,
+                                  exec_device=args.exec_device,
+                                  exec_network=args.exec_network,
+                                  chain=not args.no_chain), extra=extra)

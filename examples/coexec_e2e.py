@@ -1,7 +1,11 @@
 """End-to-end network co-execution planning (paper Table 3) + the
 TPU-native channel-split demo.
 
-Part 1: plan ResNet-18 across GPU + 3 CPU threads on the Moto 2022 model.
+Part 1: plan ResNet-18 across GPU + 3 CPU threads on the Moto 2022 model,
+        then EXECUTE the plan through repro.runtime.executor.PlanExecutor
+        (on this single-device host the mesh degrades to one group and
+        ops run unsplit; the fidelity summary still pairs executed wall
+        time with the plan's predictions per op).
 Part 2: run an actual uneven channel-split matmul across two device groups
         via shard_map (subprocess with 8 virtual devices).
 
@@ -46,6 +50,12 @@ def part1():
           f"({r.end_to_end_speedup:.2f}x; paper: 1.11x on Moto 2022)")
     co = sum(1 for d in r.decisions if not d.exclusive)
     print(f"{co}/{len(r.decisions)} ops co-executed")
+
+    from repro.runtime import PlanExecutor
+    exe = PlanExecutor(plan)
+    y, report = exe.run()
+    print(f"executed plan -> output {tuple(y.shape)}")
+    print(report.fidelity_summary())
 
 
 _PART2 = textwrap.dedent("""

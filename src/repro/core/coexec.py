@@ -15,15 +15,18 @@ all-gather that materializes the full output plays the role of
 SPMD requires uniform per-device shapes, so both groups are padded to the
 same local width `c_pad` and masked — the exact analogue of the paper's
 channel-alignment granularity (grid step 8 / float4 slices).  When the
-*consumer* is also channel-parallel (the paper's "subsequent CPU and GPU
-operations read the shared output directly"), `gather=False` skips the
-all-gather entirely and the result stays group-local.
+*consumer* is also channel-split (the paper's "subsequent CPU and GPU
+operations read the shared output directly"), `gather=False` keeps the
+result group-local as a `(2, ..., c_pad)` stack, and the consumer op takes
+that stack directly via `x_plan=`: the reconstruction happens *inside* the
+consumer's shard_map program (a fused all-gather), eliding the explicit
+reshard-to-replicated synchronization point between the two ops — the SVM
+analogue of skipping the map/unmap pair.  Both linear (`coexec_matmul`) and
+convolution (`coexec_conv2d`) support split execution and chaining.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 COEXEC_AXIS = "coexec"
+LANE_AXIS = "lane"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,59 +65,160 @@ def throughput_split(c_out: int, fast_share: float, align: int = 8) -> SplitPlan
     return SplitPlan(c_out=c_out, c_fast=c_fast, align=align)
 
 
+def split_for_mesh(c_out: int, c_fast: int, mesh: Mesh,
+                   align: int = 8) -> SplitPlan:
+    """Alignment-aware re-split: a partitioner decision (c_gpu channels on
+    the fast group) lowered onto a concrete mesh.  The padded local width
+    must shard evenly over the mesh's lane axis, so the alignment is lifted
+    to lcm(align, lane_count)."""
+    lanes = int(mesh.shape[LANE_AXIS])
+    return SplitPlan(c_out=c_out, c_fast=c_fast,
+                     align=int(np.lcm(align, lanes)))
+
+
 def pack_weights(w: jax.Array, plan: SplitPlan) -> jax.Array:
-    """(C_in, C_out) -> (2, C_in, c_pad): per-group padded weight slices."""
-    c_in = w.shape[0]
-    wf = jnp.zeros((c_in, plan.c_pad), w.dtype).at[:, :plan.c_fast].set(
-        w[:, :plan.c_fast])
-    ws = jnp.zeros((c_in, plan.c_pad), w.dtype).at[:, :plan.c_slow].set(
-        w[:, plan.c_fast:])
+    """(..., C_out) -> (2, ..., c_pad): per-group padded weight slices.
+
+    Works for linear (C_in, C_out) and conv (K, K, C_in, C_out) weights —
+    the split is always over the trailing output-channel dim.
+    """
+    lead = w.shape[:-1]
+    wf = jnp.zeros(lead + (plan.c_pad,), w.dtype).at[..., :plan.c_fast].set(
+        w[..., :plan.c_fast])
+    ws = jnp.zeros(lead + (plan.c_pad,), w.dtype).at[..., :plan.c_slow].set(
+        w[..., plan.c_fast:])
     return jnp.stack([wf, ws])
 
 
 def coexec_mesh(devices=None) -> Mesh:
-    """A two-group mesh along the co-execution axis."""
+    """A two-group mesh along the co-execution axis.
+
+    Degrades gracefully: with fewer than 2 devices there is nothing to
+    co-execute against, so the mesh collapses to a **single group** holding
+    every device — callers detect this via `mesh_groups(mesh) == 1` and run
+    ops exclusively (the executor does exactly that).  Odd device counts
+    >= 3 drop the last device to keep the two groups even.
+    """
     devices = list(jax.devices()) if devices is None else list(devices)
+    if not devices:
+        raise ValueError("coexec_mesh needs at least one device")
     n = len(devices) - len(devices) % 2
-    arr = np.array(devices[:n]).reshape(2, n // 2)
-    return Mesh(arr, (COEXEC_AXIS, "lane"))
+    if n < 2:
+        arr = np.array(devices).reshape(1, len(devices))
+    else:
+        arr = np.array(devices[:n]).reshape(2, n // 2)
+    return Mesh(arr, (COEXEC_AXIS, LANE_AXIS))
+
+
+def mesh_groups(mesh: Mesh) -> int:
+    """Number of co-execution groups (2 = split-capable, 1 = degraded)."""
+    return int(mesh.shape[COEXEC_AXIS])
+
+
+def _shard_map():
+    # jax.shard_map graduated from jax.experimental in newer releases;
+    # support both spellings.
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+def _merge_stacked(x_local: jax.Array, x_plan: SplitPlan) -> jax.Array:
+    """Reconstruct the full (..., C) activation from this device's shard of
+    a (2, ..., c_pad) group-local stack — *inside* a shard_map program.
+
+    This is the elided boundary: instead of an explicit reshard to
+    replicated between producer and consumer, the consumer all-gathers the
+    stack over (lane, coexec) as part of its own program and strips the
+    alignment padding with static slices.
+    """
+    xg = jax.lax.all_gather(x_local[0], LANE_AXIS,
+                            axis=x_local.ndim - 2, tiled=True)
+    xs = jax.lax.all_gather(xg, COEXEC_AXIS, axis=0)
+    return jnp.concatenate([xs[0][..., :x_plan.c_fast],
+                            xs[1][..., :x_plan.c_slow]], axis=-1)
+
+
+def _stacked_spec(ndim: int) -> P:
+    """(2, ..., c_pad) stacks shard group-wise + lane-wise on channels."""
+    return P(COEXEC_AXIS, *([None] * (ndim - 2)), LANE_AXIS)
+
+
+def gather_stacked(y: jax.Array, plan: SplitPlan, mesh: Mesh) -> jax.Array:
+    """Materialize the combined output of a group-local (2, ..., c_pad)
+    stack — the paper's synchronization point.
+
+    Reshard each group's slice to replicated first: concatenating slices
+    that are still lane-sharded miscompiles on some jax releases (values
+    double through the partitioner), and the gather IS the sync point, so
+    an explicit reshard is the honest lowering.
+    """
+    rep = NamedSharding(mesh, P())
+    y_fast = jax.device_put(y[0][..., :plan.c_fast], rep)
+    y_slow = jax.device_put(y[1][..., :plan.c_slow], rep)
+    return jnp.concatenate([y_fast, y_slow], axis=-1)
 
 
 def coexec_matmul(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
-                  mesh: Mesh, *, gather: bool = True) -> jax.Array:
+                  mesh: Mesh, *, gather: bool = True,
+                  x_plan: SplitPlan | None = None) -> jax.Array:
     """Channel-split matmul: each group computes its slice of X @ W.
 
-    x: (L, C_in) replicated; packed_w: (2, C_in, c_pad) sharded on group.
+    x: (L, C_in) replicated — or, with `x_plan`, the producer's group-local
+    (2, L, x_plan.c_pad) stack (chained input, no reshard in between).
+    packed_w: (2, C_in, c_pad) sharded on group.
     Returns (L, C_out) if gather else the group-local (2, L, c_pad) stack.
     """
 
     def local(x_l, w_l):
         # w_l: (1, C_in, c_pad) — this group's slice
-        return (x_l @ w_l[0])[None]          # (1, L, c_pad)
+        x_full = _merge_stacked(x_l, x_plan) if x_plan is not None else x_l
+        return (x_full @ w_l[0])[None]        # (1, L, c_pad)
 
-    # jax.shard_map graduated from jax.experimental in newer releases;
-    # support both spellings.
-    shard_map = getattr(jax, "shard_map", None)
-    if shard_map is None:
-        from jax.experimental.shard_map import shard_map
-
-    y = shard_map(
+    x_spec = _stacked_spec(3) if x_plan is not None else P()
+    y = _shard_map()(
         local, mesh=mesh,
-        in_specs=(P(), P(COEXEC_AXIS, None, "lane")),
-        out_specs=P(COEXEC_AXIS, None, "lane"),
+        in_specs=(x_spec, _stacked_spec(3)),
+        out_specs=_stacked_spec(3),
     )(x, packed_w)                            # (2, L, c_pad) global
 
     if not gather:
         return y
-    # materialize the combined output — the paper's synchronization point.
-    # Reshard each group's slice to replicated first: concatenating slices
-    # that are still lane-sharded miscompiles on some jax releases (values
-    # double through the partitioner), and the gather IS the sync point, so
-    # an explicit reshard is the honest lowering.
-    rep = NamedSharding(mesh, P())
-    y_fast = jax.device_put(y[0, :, :plan.c_fast], rep)
-    y_slow = jax.device_put(y[1, :, :plan.c_slow], rep)
-    return jnp.concatenate([y_fast, y_slow], axis=-1)
+    return gather_stacked(y, plan, mesh)
+
+
+def coexec_conv2d(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
+                  mesh: Mesh, *, stride: int = 1, gather: bool = True,
+                  x_plan: SplitPlan | None = None) -> jax.Array:
+    """Channel-split SAME convolution across the two co-execution groups.
+
+    x: (B, H, W, C_in) replicated — or, with `x_plan`, the producer's
+    group-local (2, B, H, W, x_plan.c_pad) stack.
+    packed_w: (2, K, K, C_in, c_pad) sharded on group.
+    Returns (B, H', W', C_out) if gather else the (2, B, H', W', c_pad)
+    stack.  Output channels are the split dim; spatial dims follow SAME
+    semantics (callers crop to the declared ConvOp shape).
+    """
+
+    def local(x_l, w_l):
+        x_full = _merge_stacked(x_l, x_plan) if x_plan is not None else x_l
+        y = jax.lax.conv_general_dilated(
+            x_full.astype(jnp.float32), w_l[0].astype(jnp.float32),
+            window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x_full.dtype)
+        return y[None]                        # (1, B, H', W', c_pad)
+
+    x_spec = _stacked_spec(5) if x_plan is not None else P()
+    y = _shard_map()(
+        local, mesh=mesh,
+        in_specs=(x_spec, _stacked_spec(5)),
+        out_specs=_stacked_spec(5),
+    )(x, packed_w)                            # (2, B, H', W', c_pad)
+
+    if not gather:
+        return y
+    return gather_stacked(y, plan, mesh)
 
 
 def coexec_linear_ref(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -7,11 +7,42 @@ Input resolution is 224x224x3, as in the paper's ImageNet models.
 """
 from __future__ import annotations
 
-from typing import List, Tuple, Union
+import math
+from typing import List, Optional, Tuple, Union
 
 from repro.core.types import ConvOp, LinearOp
 
 Unit = Tuple[str, Union[ConvOp, LinearOp, int]]
+
+
+def unit_input_shape(unit: Unit) -> Optional[Tuple[int, ...]]:
+    """Declared input shape of a conv/linear unit ((H, W, C) or (L, C)); a
+    pool unit's input is whatever the previous unit produced (None)."""
+    kind, payload = unit
+    if kind == "pool":
+        return None
+    from repro.kernels import registry
+    return registry.get(kind).input_shape(payload)
+
+
+def unit_output_shape(unit: Unit, c_prev: int = 0) -> Tuple[int, ...]:
+    """Declared output shape of a unit.  Pool units only record output
+    bytes, so the producing channel count `c_prev` is needed to recover
+    their spatial extent (networks here never pool over channels)."""
+    kind, payload = unit
+    if kind == "pool":
+        edge = pool_out_edge(int(payload), c_prev)
+        return (edge, edge, c_prev)
+    from repro.kernels import registry
+    return registry.get(kind).output_shape(payload)
+
+
+def pool_out_edge(pool_bytes: int, c: int) -> int:
+    """Output edge length of a square pool unit from its recorded float32
+    byte count: bytes = 4 * edge^2 * c (edge 1 = global pooling)."""
+    if c <= 0:
+        raise ValueError(f"pool unit needs a positive channel count, got {c}")
+    return max(1, math.isqrt(max(1, pool_bytes // (4 * c))))
 
 
 def vgg16() -> List[Unit]:

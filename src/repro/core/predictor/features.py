@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core.simulator.devices import DEVICES
 from repro.core.simulator.gpu_model import dispatch_for
-from repro.core.types import ConvOp, LinearOp, Op
+from repro.core.types import Op
+from repro.kernels import registry
 
 BLACKBOX_LINEAR = ["L", "C_in", "C_out", "log_flops", "log_weight_bytes"]
 BLACKBOX_CONV = ["H_in", "W_in", "C_in", "C_out", "K", "S",
@@ -29,11 +30,9 @@ DISPATCH_FEATURES = ["wg_x", "wg_y", "wg_size", "grid_x", "grid_y",
 
 
 def _base_features(op: Op) -> List[float]:
-    if isinstance(op, LinearOp):
-        return [op.L, op.C_in, op.C_out,
-                np.log(max(op.flops, 1)), np.log(max(op.weight_bytes, 1))]
-    return [op.H_in, op.W_in, op.C_in, op.C_out, op.K, op.S,
-            np.log(max(op.flops, 1)), np.log(max(op.weight_bytes, 1))]
+    # one dispatch table for planner and executor: the registry owns the
+    # per-kind base feature extractors
+    return registry.entry_for(op).base_features(op)
 
 
 def blackbox_features(ops: Sequence[Op]) -> np.ndarray:

@@ -148,11 +148,11 @@ class MuxPredictor:
         return self.linear.device
 
     def predict(self, ops: Sequence[Op]) -> np.ndarray:
-        from repro.core.types import LinearOp
+        from repro.kernels.registry import op_kind
         ops = list(ops)
         out = np.empty(len(ops))
-        il = [i for i, o in enumerate(ops) if isinstance(o, LinearOp)]
-        ic = [i for i, o in enumerate(ops) if not isinstance(o, LinearOp)]
+        il = [i for i, o in enumerate(ops) if op_kind(o) == "linear"]
+        ic = [i for i, o in enumerate(ops) if op_kind(o) == "conv"]
         if il:
             out[il] = self.linear.predict([ops[i] for i in il])
         if ic:

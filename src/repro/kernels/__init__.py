@@ -8,4 +8,9 @@
 Each package has <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper), ref.py (pure-jnp oracle); tests validate interpret=True against
 the oracle over shape/dtype sweeps.
+
+registry.py is the shared dispatch table (op kind -> shapes, features,
+Pallas op, jnp oracle) used by both the planner and the plan executor;
+split_matmul/ops.py and winograd_conv/ops.py register their lowerings
+there at import.
 """

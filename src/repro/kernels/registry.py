@@ -1,0 +1,185 @@
+"""Shared kernel registry: one dispatch table for planner and executor.
+
+The planner and the execution runtime used to hold separate, drifting ideas
+of what an op *kind* means: the predictors dispatched linear-vs-conv with
+`isinstance` checks, the plan codec hardcoded kind strings, and the Pallas
+kernels (`split_matmul`, `winograd_conv`) were wired to nothing.  This
+module is the single table that maps an op kind to
+
+  * its **shape contract** (input / weight / output shapes, weight init) —
+    what `repro.runtime.executor.PlanExecutor` needs to materialize and
+    chain activations,
+  * its **base feature extractor** — what the latency predictors featurize
+    (`core/predictor/features.py` routes through here),
+  * its **lowering** — the Pallas op and the pure-jnp oracle that actually
+    compute it (registered lazily by `kernels/*/ops.py` so importing the
+    registry never drags in Pallas).
+
+`op_kind(op)` is the one place the LinearOp/ConvOp distinction is made;
+everything else (plan JSON codecs, MuxPredictor routing, executor
+dispatch) looks the kind up here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.types import ConvOp, LinearOp, Op
+
+# ------------------------------------------------------------------ kinds
+
+#: op kind -> module that registers its lowering on import
+_LOWERING_MODULES = {
+    "linear": "repro.kernels.split_matmul.ops",
+    "conv": "repro.kernels.winograd_conv.ops",
+}
+
+
+def op_kind(op: Op) -> str:
+    """The registry kind of an op — the one isinstance check in the repo."""
+    if isinstance(op, LinearOp):
+        return "linear"
+    if isinstance(op, ConvOp):
+        return "conv"
+    raise TypeError(f"unregistered op type {type(op).__name__}")
+
+
+# ------------------------------------------------------- shape contracts
+
+def _linear_input_shape(op: LinearOp) -> Tuple[int, ...]:
+    return (op.L, op.C_in)
+
+
+def _linear_weight_shape(op: LinearOp) -> Tuple[int, ...]:
+    return (op.C_in, op.C_out)
+
+
+def _linear_output_shape(op: LinearOp) -> Tuple[int, ...]:
+    return (op.L, op.C_out)
+
+
+def _conv_input_shape(op: ConvOp) -> Tuple[int, ...]:
+    return (op.H_in, op.W_in, op.C_in)
+
+
+def _conv_weight_shape(op: ConvOp) -> Tuple[int, ...]:
+    return (op.K, op.K, op.C_in, op.C_out)
+
+
+def _conv_output_shape(op: ConvOp) -> Tuple[int, ...]:
+    return (op.H_out, op.W_out, op.C_out)
+
+
+def _linear_base_features(op: LinearOp) -> List[float]:
+    return [op.L, op.C_in, op.C_out,
+            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
+
+
+def _conv_base_features(op: ConvOp) -> List[float]:
+    return [op.H_in, op.W_in, op.C_in, op.C_out, op.K, op.S,
+            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
+
+
+def _fan_in(op: Op) -> int:
+    if isinstance(op, LinearOp):
+        return op.C_in
+    return op.K * op.K * op.C_in
+
+
+# --------------------------------------------------------------- entries
+
+@dataclasses.dataclass(frozen=True)
+class KernelLowering:
+    """How an op kind actually computes: Pallas path + jnp oracle.
+
+    Both callables take ``(x, w, op, ...)``; the Pallas path additionally
+    accepts ``interpret=`` for CPU-container validation.  Registered by the
+    kernel package's ops.py (`register_lowering`), resolved lazily.
+    """
+
+    pallas: Callable[..., object]
+    oracle: Callable[..., object]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """Everything the planner and the executor need to know about a kind."""
+
+    kind: str
+    input_shape: Callable[[Op], Tuple[int, ...]]
+    weight_shape: Callable[[Op], Tuple[int, ...]]
+    output_shape: Callable[[Op], Tuple[int, ...]]
+    base_features: Callable[[Op], List[float]]
+
+    def init_weight(self, op: Op, rng: np.random.Generator) -> np.ndarray:
+        """Seeded fan-in-scaled weights (keeps deep chains O(1) magnitude,
+        which is what lets bf16 equivalence tests use sane tolerances)."""
+        shape = self.weight_shape(op)
+        return (rng.standard_normal(shape) /
+                np.sqrt(max(1, _fan_in(op)))).astype(np.float32)
+
+    @property
+    def lowering(self) -> KernelLowering:
+        return get_lowering(self.kind)
+
+
+_ENTRIES: Dict[str, KernelEntry] = {
+    "linear": KernelEntry(
+        kind="linear",
+        input_shape=_linear_input_shape,
+        weight_shape=_linear_weight_shape,
+        output_shape=_linear_output_shape,
+        base_features=_linear_base_features,
+    ),
+    "conv": KernelEntry(
+        kind="conv",
+        input_shape=_conv_input_shape,
+        weight_shape=_conv_weight_shape,
+        output_shape=_conv_output_shape,
+        base_features=_conv_base_features,
+    ),
+}
+
+_LOWERINGS: Dict[str, KernelLowering] = {}
+
+
+def kinds() -> List[str]:
+    return sorted(_ENTRIES)
+
+
+def get(kind: str) -> KernelEntry:
+    try:
+        return _ENTRIES[kind]
+    except KeyError:
+        raise KeyError(f"unregistered op kind {kind!r}; "
+                       f"known: {kinds()}") from None
+
+
+def entry_for(op: Op) -> KernelEntry:
+    return get(op_kind(op))
+
+
+def register_lowering(kind: str, *, pallas: Callable, oracle: Callable
+                      ) -> KernelLowering:
+    """Called by kernels/*/ops.py at import time to hook its kernels in."""
+    if kind not in _ENTRIES:
+        raise KeyError(f"cannot register lowering for unknown kind {kind!r}")
+    low = KernelLowering(pallas=pallas, oracle=oracle)
+    _LOWERINGS[kind] = low
+    return low
+
+
+def get_lowering(kind: str) -> KernelLowering:
+    """Resolve a kind's lowering, importing its kernel package on demand."""
+    if kind not in _LOWERINGS:
+        get(kind)                              # raise on unknown kinds
+        importlib.import_module(_LOWERING_MODULES[kind])
+        if kind not in _LOWERINGS:             # pragma: no cover - wiring bug
+            raise RuntimeError(
+                f"{_LOWERING_MODULES[kind]} did not register a lowering "
+                f"for {kind!r}")
+    return _LOWERINGS[kind]

@@ -3,6 +3,11 @@
 On a real TPU this runs the Pallas kernel natively; in this CPU container
 `interpret=True` executes the kernel body in Python for correctness
 validation (tests/test_kernels.py sweeps shapes/dtypes against ref.py).
+
+This module also registers the "linear" lowering in the shared kernel
+registry (repro.kernels.registry): the plan executor dispatches linear
+units here — full-width `split_matmul_op` on the Pallas path, plain
+``x @ w`` as the oracle.
 """
 from __future__ import annotations
 
@@ -10,6 +15,7 @@ import functools
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.split_matmul.split_matmul import split_matmul
 from repro.kernels.split_matmul.ref import split_matmul_ref
 
@@ -24,3 +30,17 @@ def split_matmul_op(x, w, c0: int, width: int, *, bm: int = 128,
         return split_matmul_ref(x, w, c0, width)
     return split_matmul(x, w, c0, width, bm=bm, bn=bn, bk=bk,
                         interpret=interpret)
+
+
+# ------------------------------------------------------- registry hookup
+
+def _linear_pallas(x, w, op, *, interpret: bool = False):
+    return split_matmul_op(x, w, 0, op.C_out, interpret=interpret)
+
+
+def _linear_oracle(x, w, op):
+    return x @ w
+
+
+registry.register_lowering("linear", pallas=_linear_pallas,
+                           oracle=_linear_oracle)

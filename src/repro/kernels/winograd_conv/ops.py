@@ -3,6 +3,14 @@
 `conv2d_op` mirrors the paper's kernel-selection logic (Section 3.2): 3x3
 stride-1 convs with enough channels take the Winograd path; everything else
 falls back to the direct reference convolution.
+
+This module also registers the "conv" lowering in the shared kernel
+registry (repro.kernels.registry), which is how the plan executor reaches
+these kernels: the Pallas path goes through `conv2d_op` (Winograd when
+eligible) and the oracle is the direct lax.conv reference.  The op's
+declared output shape uses floor division (`ConvOp.H_out`), while SAME
+convolution produces ceil(H/S) rows — the registry lowering crops to the
+declared shape so executed activations chain exactly like planned ones.
 """
 from __future__ import annotations
 
@@ -10,15 +18,36 @@ import functools
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.winograd_conv.ref import conv2d_ref
 from repro.kernels.winograd_conv.winograd_conv import winograd_conv2d
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def conv2d_op(x, w, *, interpret: bool = False, use_kernel: bool = True):
+@functools.partial(jax.jit, static_argnames=("stride", "interpret",
+                                             "use_kernel"))
+def conv2d_op(x, w, *, stride: int = 1, interpret: bool = False,
+              use_kernel: bool = True):
     kh, kw, cin, cout = w.shape
-    winograd_eligible = (kh == 3 and kw == 3 and cout >= 128
+    winograd_eligible = (kh == 3 and kw == 3 and stride == 1 and cout >= 128
                          and x.shape[1] * x.shape[2] >= 1024 and cin >= 32)
     if use_kernel and winograd_eligible:
         return winograd_conv2d(x, w, interpret=interpret)
-    return conv2d_ref(x, w)
+    return conv2d_ref(x, w, stride=stride)
+
+
+# ------------------------------------------------------- registry hookup
+
+def _crop_to_declared(y, op):
+    return y[:, :op.H_out, :op.W_out, :]
+
+
+def _conv_pallas(x, w, op, *, interpret: bool = False):
+    return _crop_to_declared(
+        conv2d_op(x, w, stride=op.S, interpret=interpret), op)
+
+
+def _conv_oracle(x, w, op):
+    return _crop_to_declared(conv2d_ref(x, w, stride=op.S), op)
+
+
+registry.register_lowering("conv", pallas=_conv_pallas, oracle=_conv_oracle)

@@ -1,13 +1,14 @@
-"""Pure-jnp oracle: direct 3x3 SAME convolution via lax.conv."""
+"""Pure-jnp oracle: direct SAME convolution via lax.conv."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x: (B,H,W,Cin); w: (3,3,Cin,Cout) -> (B,H,W,Cout), stride 1, SAME."""
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """x: (B,H,W,Cin); w: (K,K,Cin,Cout) -> (B,ceil(H/S),ceil(W/S),Cout),
+    SAME padding."""
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
-        window_strides=(1, 1), padding="SAME",
+        window_strides=(stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)

@@ -4,7 +4,11 @@ The paper's partitioner runs offline as part of model compilation; this
 package is the artifact layer that makes that real — `CoexecPlan` (the
 serialized schedule + provenance), `PlanCache` (on-disk persistence), and
 cached planning entry points that skip all predictor/simulator work on a
-warm hit.  CLI: `python -m repro.runtime.plan --help`.
+warm hit — plus the execution runtime that lowers a plan into actual
+split computation: `PlanExecutor` (executor.py) runs every decision on the
+co-execution mesh with gather-elided chaining and reports per-op
+executed-vs-predicted fidelity.  CLIs: `python -m repro.runtime.plan`,
+`python -m repro.runtime.executor`.
 
 Exports resolve lazily (PEP 562) so `python -m repro.runtime.plan` does not
 pre-import the CLI module through the package and trip runpy's
@@ -19,14 +23,20 @@ _EXPORTS = {
     "plan_network_cached": "repro.runtime.cache",
     "PLAN_SCHEMA_VERSION": "repro.runtime.plan",
     "CoexecPlan": "repro.runtime.plan",
+    "ExecSpec": "repro.runtime.plan",
     "PlanProvenance": "repro.runtime.plan",
     "decision_from_json": "repro.runtime.plan",
     "decision_to_json": "repro.runtime.plan",
+    "decision_to_spec": "repro.runtime.plan",
     "network_fingerprint": "repro.runtime.plan",
     "op_from_json": "repro.runtime.plan",
     "op_to_json": "repro.runtime.plan",
     "plan_from_report": "repro.runtime.plan",
     "predictor_checksum": "repro.runtime.plan",
+    "train_mux_predictors": "repro.runtime.plan",
+    "ExecutionReport": "repro.runtime.executor",
+    "OpTiming": "repro.runtime.executor",
+    "PlanExecutor": "repro.runtime.executor",
 }
 
 __all__ = sorted(_EXPORTS)

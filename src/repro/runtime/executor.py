@@ -1,0 +1,450 @@
+"""Plan execution runtime: lower a CoexecPlan into a real split-execution
+graph.
+
+PR 1 made partitioning a compile-once artifact; this module closes the
+plan->execution gap.  `PlanExecutor` walks a plan's schedule and lowers
+every entry to actual computation on the co-execution mesh:
+
+  * **co-executed** conv/linear units run channel-split across the two
+    device groups (`core/coexec.coexec_matmul` / `coexec_conv2d`), with the
+    split taken verbatim from the plan's `PartitionDecision` (GPU share ->
+    fast group) and re-aligned to the mesh (`split_for_mesh`);
+  * consecutive co-executed units whose shapes chain keep their outputs
+    **group-local** (`gather=False`) — the consumer reconstructs its input
+    inside its own shard_map program, eliding the explicit reshard between
+    the ops.  This is the TPU analogue of the paper's fine-grained SVM:
+    "subsequent CPU and GPU operations read the shared output directly".
+    An explicit reshard (`gather_stacked`) happens only at true boundaries:
+    pool units, exclusive units, shape-adapting transitions, and the final
+    output;
+  * **exclusive** units (all channels on one side) and every unit on a
+    degraded single-group mesh run unsplit through the shared kernel
+    registry — jnp oracle by default, Pallas kernels with `use_pallas=True`;
+  * **pool** units lower to max/global-average pooling on the materialized
+    activation (pooling always runs GPU-side in the paper: no sync point).
+
+The unit list is a flat latency schedule, not a full dataflow DAG (residual
+adds are not modeled); where a unit's declared input shape disagrees with
+the producing activation (ResNet projection shortcuts), the executor
+re-materializes the declared shape deterministically (tile + crop), and the
+unsplit oracle (`run_oracle`) applies the identical adaptation — so
+executed plans are testable against the oracle end to end.
+
+Every unit execution is timed; the resulting `ExecutionReport` pairs
+executed wall time with the plan's predicted latency per op (the fidelity
+summary that future online replanning will consume).  Note the predictions
+model a *phone*, the execution runs on *this host* — the report tracks the
+ratio's stability across ops, not its absolute value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coexec import (SplitPlan, coexec_conv2d, coexec_matmul,
+                               coexec_mesh, gather_stacked, mesh_groups,
+                               pack_weights, split_for_mesh)
+from repro.core.networks import Unit, pool_out_edge, unit_input_shape
+from repro.kernels import registry
+from repro.runtime.plan import CoexecPlan, ExecSpec, network_fingerprint
+
+
+# -------------------------------------------------------------- reporting
+
+@dataclasses.dataclass
+class OpTiming:
+    """Executed-vs-predicted record for one schedule unit."""
+
+    index: int
+    unit: str                    # "conv" | "linear" | "pool"
+    label: str
+    mode: str                    # "coexec" | "exclusive" | "pool"
+    c_fast: int
+    c_slow: int
+    chained_input: bool          # consumed the producer's group-local stack
+    gathered_output: bool        # output materialized (reshard point)
+    wall_us: float
+    pred_us: float
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    """Per-op execution timings + reshard accounting for one plan run."""
+
+    device: str                  # the plan's (simulated) target device
+    network_fingerprint: str
+    chain: bool
+    split_capable: bool
+    timings: List[OpTiming]
+    reshard_points: int
+    elided: int
+
+    @property
+    def wall_us(self) -> float:
+        return sum(t.wall_us for t in self.timings)
+
+    @property
+    def predicted_us(self) -> float:
+        return sum(t.pred_us for t in self.timings)
+
+    def count(self, mode: str) -> int:
+        return sum(1 for t in self.timings if t.mode == mode)
+
+    def fidelity_summary(self) -> str:
+        n = len(self.timings)
+        ratio = self.wall_us / max(self.predicted_us, 1e-9)
+        return (f"fidelity: {n} units ({self.count('coexec')} co-executed, "
+                f"{self.count('exclusive')} exclusive, "
+                f"{self.count('pool')} pool), "
+                f"{self.reshard_points} reshard points "
+                f"({self.elided} elided), "
+                f"executed {self.wall_us / 1e3:.1f} ms vs predicted "
+                f"{self.predicted_us / 1e3:.1f} ms (x{ratio:.2f})")
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"device": self.device,
+                "network_fingerprint": self.network_fingerprint,
+                "chain": self.chain,
+                "split_capable": self.split_capable,
+                "reshard_points": self.reshard_points,
+                "elided": self.elided,
+                "wall_us": self.wall_us,
+                "predicted_us": self.predicted_us,
+                "timings": [t.to_json() for t in self.timings]}
+
+
+def spec_label(spec: ExecSpec) -> str:
+    if spec.unit == "pool":
+        return f"pool {spec.pool_bytes}B"
+    op = spec.op
+    if spec.unit == "linear":
+        return f"linear {op.L}x{op.C_in}->{op.C_out}"
+    return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
+            f"K{op.K} S{op.S}")
+
+
+# ------------------------------------------------------------- activations
+
+@dataclasses.dataclass
+class _Stacked:
+    """A group-local (2, ..., c_pad) activation that has NOT been gathered.
+
+    `shape` is the logical materialized shape the stack reconstructs to —
+    what shape-chaining compatibility is checked against.
+    """
+
+    data: jax.Array
+    split: SplitPlan
+    shape: Tuple[int, ...]
+
+
+_Act = Union[jax.Array, _Stacked]
+
+
+def _fit_axis(x: jax.Array, axis: int, size: int) -> jax.Array:
+    """Deterministically re-materialize one axis to `size` (tile + crop)."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    if cur < size:
+        reps = [1] * x.ndim
+        reps[axis] = -(-size // cur)
+        x = jnp.tile(x, reps)
+    return jax.lax.slice_in_dim(x, 0, size, axis=axis)
+
+
+# --------------------------------------------------------------- executor
+
+class PlanExecutor:
+    """Executes a compiled `CoexecPlan` on the co-execution mesh.
+
+    Parameters are materialized once at construction from a seeded rng
+    (fan-in-scaled, via the kernel registry) and shared by the split run
+    and the unsplit oracle, so the two are comparable elementwise.
+    """
+
+    def __init__(self, plan: CoexecPlan, units: Optional[Sequence[Unit]] = None,
+                 *, mesh=None, dtype=jnp.float32, seed: int = 0,
+                 use_pallas: bool = False, interpret: bool = False):
+        self.plan = plan
+        self.specs = plan.exec_specs()
+        units = plan.units if units is None else list(units)
+        fp = network_fingerprint(units)
+        if fp != plan.provenance.network_fingerprint:
+            raise ValueError(
+                "units do not match the plan's network fingerprint "
+                f"({fp} != {plan.provenance.network_fingerprint}); "
+                "the plan was compiled for a different graph")
+        self.units = units
+        self.mesh = coexec_mesh() if mesh is None else mesh
+        self.split_capable = mesh_groups(self.mesh) == 2
+        self.dtype = dtype
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.last_report: Optional[ExecutionReport] = None
+
+        rng = np.random.default_rng(seed)
+        self.params: List[Optional[jax.Array]] = []
+        for spec in self.specs:
+            if spec.unit == "pool":
+                self.params.append(None)
+            else:
+                w = registry.get(spec.unit).init_weight(spec.op, rng)
+                self.params.append(jnp.asarray(w, dtype))
+        # pre-split the co-executed weights once: (split, packed) per spec —
+        # they depend only on (spec, mesh, params), and packing host-side
+        # inside the per-op stopwatch would contaminate the timings
+        self._splits: List[Optional[Tuple[SplitPlan, jax.Array]]] = []
+        for spec, w in zip(self.specs, self.params):
+            if self.split_capable and spec.coexec:
+                split = split_for_mesh(spec.op.C_out, spec.c_fast, self.mesh)
+                self._splits.append((split, pack_weights(w, split)))
+            else:
+                self._splits.append(None)
+        self._input_seed = seed + 1
+
+    # ------------------------------------------------------------- inputs
+    def input_template(self) -> jax.Array:
+        """A seeded input matching the first conv/linear unit's shape
+        (deterministic: every call returns the same values, so `run` and
+        `run_oracle` with x=None see identical inputs)."""
+        for spec in self.specs:
+            if spec.unit == "pool":
+                continue
+            shape = unit_input_shape((spec.unit, spec.op))
+            if spec.unit == "conv":
+                shape = (1,) + tuple(shape)
+            rng = np.random.default_rng(self._input_seed)
+            x = rng.standard_normal(shape).astype(np.float32)
+            return jnp.asarray(x, self.dtype)
+        raise ValueError("plan has no conv/linear units to execute")
+
+    # -------------------------------------------------------- elementaries
+    def _materialize(self, act: _Act) -> Tuple[jax.Array, int]:
+        """Explicit reshard of a group-local stack (1 sync point), no-op on
+        plain activations."""
+        if isinstance(act, _Stacked):
+            return gather_stacked(act.data, act.split, self.mesh), 1
+        return act, 0
+
+    def _adapt(self, x: jax.Array, spec: ExecSpec) -> jax.Array:
+        """Re-materialize a plain activation to the unit's declared input
+        shape (identity when shapes already chain)."""
+        op = spec.op
+        if spec.unit == "linear":
+            flat = x.reshape(-1)
+            flat = _fit_axis(flat, 0, op.L * op.C_in)
+            return flat.reshape(op.L, op.C_in)
+        if x.ndim == 2:                       # linear -> conv (not in the
+            x = x.reshape(1, 1, *x.shape)     # paper's nets, but total)
+        x = _fit_axis(x, 1, op.H_in)
+        x = _fit_axis(x, 2, op.W_in)
+        return _fit_axis(x, 3, op.C_in)
+
+    def _pool(self, x: jax.Array, pool_bytes: int) -> jax.Array:
+        """Lower a pool unit: global average pool when the recorded output
+        is one value per channel, else max-pool down to the recorded edge."""
+        c = x.shape[-1]
+        edge = pool_out_edge(pool_bytes, c)
+        if edge <= 1:
+            return jnp.mean(x, axis=(1, 2), keepdims=True)
+        r = max(1, x.shape[1] // edge)
+        x = x[:, :edge * r, :edge * r, :]
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, r, r, 1), window_strides=(1, r, r, 1),
+            padding="VALID")
+
+    def _dense(self, x: jax.Array, w: jax.Array, spec: ExecSpec
+               ) -> jax.Array:
+        """Unsplit execution through the registry lowering."""
+        low = registry.get_lowering(spec.unit)
+        if self.use_pallas:
+            return low.pallas(x, w, spec.op, interpret=self.interpret)
+        return low.oracle(x, w, spec.op)
+
+    def _chains(self, act: _Stacked, spec: ExecSpec) -> bool:
+        """Can this unit consume the producer's stack directly?  Only when
+        the declared input shape equals the stack's logical shape exactly —
+        any adaptation is a true boundary."""
+        op = spec.op
+        if spec.unit == "linear":
+            return act.shape == (op.L, op.C_in)
+        return act.shape == (1, op.H_in, op.W_in, op.C_in)
+
+    # ----------------------------------------------------------------- run
+    def run(self, x: Optional[jax.Array] = None, *, chain: bool = True,
+            warmup: bool = False) -> Tuple[jax.Array, ExecutionReport]:
+        """Execute the plan; returns (output, ExecutionReport).
+
+        `warmup=True` runs the whole schedule once untimed first, so the
+        reported per-op wall times measure steady-state execution rather
+        than shard_map tracing + XLA compilation (first-touch compile can
+        dominate the microsecond-scale predictions by orders of
+        magnitude).  The CLIs and `tab3 --execute` warm up by default;
+        equivalence tests skip it for speed.
+        """
+        if warmup:
+            self.run(x, chain=chain, warmup=False)
+        act: _Act = (self.input_template() if x is None
+                     else jnp.asarray(x, self.dtype))
+        timings: List[OpTiming] = []
+        reshard = elided = 0
+        for i, (spec, w) in enumerate(zip(self.specs, self.params)):
+            t0 = time.perf_counter()
+            chained = False
+            mode = "pool"
+            if spec.unit == "pool":
+                act, r = self._materialize(act)
+                reshard += r
+                act = self._pool(act, spec.pool_bytes)
+            else:
+                do_split = self.split_capable and spec.coexec
+                x_plan = None
+                if isinstance(act, _Stacked):
+                    if chain and do_split and self._chains(act, spec):
+                        x_in, x_plan = act.data, act.split
+                        chained = True
+                        elided += 1
+                    else:
+                        act, r = self._materialize(act)
+                        reshard += r
+                if not chained:
+                    x_in = self._adapt(act, spec)
+                if do_split:
+                    mode = "coexec"
+                    op = spec.op
+                    split, packed = self._splits[i]
+                    if spec.unit == "linear":
+                        y = coexec_matmul(x_in, packed, split, self.mesh,
+                                          gather=False, x_plan=x_plan)
+                        shape = (op.L, op.C_out)
+                    else:
+                        y = coexec_conv2d(x_in, packed, split, self.mesh,
+                                          stride=op.S, gather=False,
+                                          x_plan=x_plan)
+                        # SAME conv rounds up; crop the stack to the
+                        # declared (floor) shape so chaining stays exact
+                        y = y[:, :, :op.H_out, :op.W_out, :]
+                        b = x_in.shape[1] if chained else x_in.shape[0]
+                        shape = (b, op.H_out, op.W_out, op.C_out)
+                    act = _Stacked(y, split, shape)
+                    if not chain:       # gather-every-op path: sync now
+                        act, r = self._materialize(act)
+                        reshard += r
+                else:
+                    mode = "exclusive"
+                    act = self._dense(x_in, w, spec)
+            jax.block_until_ready(act.data if isinstance(act, _Stacked)
+                                  else act)
+            timings.append(OpTiming(
+                index=i, unit=spec.unit, label=spec_label(spec), mode=mode,
+                c_fast=spec.c_fast, c_slow=spec.c_slow,
+                chained_input=chained,
+                gathered_output=not isinstance(act, _Stacked),
+                wall_us=(time.perf_counter() - t0) * 1e6,
+                pred_us=spec.pred_total_us))
+
+        # the terminal sync point: with chaining, the last co-executed op's
+        # gather is deferred to here — time it and charge it to that op so
+        # chained and gather-every-op wall totals stay comparable
+        t0 = time.perf_counter()
+        y, r = self._materialize(act)
+        jax.block_until_ready(y)
+        reshard += r
+        if timings and r:
+            timings[-1].gathered_output = True
+            timings[-1].wall_us += (time.perf_counter() - t0) * 1e6
+        report = ExecutionReport(
+            device=self.plan.provenance.device,
+            network_fingerprint=self.plan.provenance.network_fingerprint,
+            chain=chain, split_capable=self.split_capable, timings=timings,
+            reshard_points=reshard, elided=elided)
+        self.last_report = report
+        return y, report
+
+    __call__ = run
+
+    def run_oracle(self, x: Optional[jax.Array] = None) -> jax.Array:
+        """The unsplit reference: every unit dense, identical params and
+        shape adaptation — what split execution must match elementwise."""
+        act = (self.input_template() if x is None
+               else jnp.asarray(x, self.dtype))
+        for spec, w in zip(self.specs, self.params):
+            if spec.unit == "pool":
+                act = self._pool(act, spec.pool_bytes)
+            else:
+                act = self._dense(self._adapt(act, spec), w, spec)
+        return act
+
+
+# --------------------------------------------------------------------- CLI
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    from repro.core.networks import NETWORKS
+    from repro.core.simulator.devices import DEVICES
+    from repro.core.sync import SyncMechanism
+    from repro.runtime.cache import PlanCache, plan_network_cached
+    from repro.runtime.plan import train_mux_predictors
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime.executor",
+        description="Execute a compiled co-execution plan end to end and "
+                    "report executed-vs-predicted fidelity per op.")
+    ap.add_argument("--network", default="resnet18", choices=sorted(NETWORKS))
+    ap.add_argument("--device", default="moto2022", choices=sorted(DEVICES))
+    ap.add_argument("--threads", type=int, default=3)
+    ap.add_argument("--mechanism", default="svm_poll",
+                    choices=[m.value for m in SyncMechanism])
+    ap.add_argument("--cache-dir", default="reports/plans")
+    ap.add_argument("--samples", type=int, default=400)
+    ap.add_argument("--estimators", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--no-chain", action="store_true",
+                    help="gather after every co-executed op (no elision)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the untimed warmup pass (timings then "
+                         "include tracing + compilation)")
+    ap.add_argument("--per-op", action="store_true",
+                    help="print one line per executed unit")
+    args = ap.parse_args(argv)
+
+    from pathlib import Path
+    mech = SyncMechanism(args.mechanism)
+    cp, gp = train_mux_predictors(args.device, args.threads,
+                                  samples=args.samples,
+                                  estimators=args.estimators)
+    cache = PlanCache(Path(args.cache_dir))
+    plan = plan_network_cached(NETWORKS[args.network](), cp, gp,
+                               threads=args.threads, mechanism=mech,
+                               seed=args.seed, cache=cache)
+    status = "HIT" if cache.hits else "MISS (compiled)"
+    exe = PlanExecutor(plan)
+    groups = "2-group split mesh" if exe.split_capable else \
+        "degraded single-group mesh (exclusive execution)"
+    print(f"execute {args.network} on {args.device} plan {plan.key} "
+          f"(cache {status}; {groups})")
+    _, report = exe.run(chain=not args.no_chain,
+                        warmup=not args.no_warmup)
+    if args.per_op:
+        for t in report.timings:
+            extra = " chained" if t.chained_input else ""
+            print(f"  [{t.index:02d}] {t.label:42s} {t.mode:9s} "
+                  f"{t.c_fast}/{t.c_slow} wall {t.wall_us:9.0f}us "
+                  f"pred {t.pred_us:8.1f}us{extra}")
+    print(report.fidelity_summary())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

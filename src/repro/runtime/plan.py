@@ -28,6 +28,7 @@ from repro.core.partitioner import PartitionDecision
 from repro.core.planner import PlanReport
 from repro.core.sync import SyncMechanism
 from repro.core.types import ConvOp, LinearOp, Op
+from repro.kernels.registry import op_kind
 
 PLAN_SCHEMA_VERSION = 1
 
@@ -39,7 +40,7 @@ PLANNER_GRID = "grid"                # measurement-driven oracle
 # --------------------------------------------------------------- op codecs
 
 def op_to_json(op: Op) -> Dict[str, Any]:
-    if isinstance(op, LinearOp):
+    if op_kind(op) == "linear":
         return {"kind": "linear", "L": op.L, "C_in": op.C_in,
                 "C_out": op.C_out}
     return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
@@ -157,6 +158,44 @@ class PlanProvenance:
         return PlanProvenance(**d)
 
 
+# ------------------------------------------------------------- exec specs
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Executable lowering of one schedule entry.
+
+    A `PartitionDecision` is a *planning* fact (what the predictors said);
+    an ExecSpec is the runtime contract the executor consumes: which unit
+    kind to dispatch through the kernel registry, how many output channels
+    each co-execution group owns (`c_fast` = the GPU-analogue share,
+    `c_slow` = the CPU-analogue share), and the predicted latency the
+    fidelity report compares executed timings against.  Pool units carry
+    only their output bytes.
+    """
+
+    unit: str                        # "conv" | "linear" | "pool"
+    op: Optional[Op] = None
+    pool_bytes: int = 0
+    c_fast: int = 0
+    c_slow: int = 0
+    pred_total_us: float = 0.0
+
+    @property
+    def exclusive(self) -> bool:
+        return self.c_fast == 0 or self.c_slow == 0
+
+    @property
+    def coexec(self) -> bool:
+        return self.unit != "pool" and not self.exclusive
+
+
+def decision_to_spec(dec: PartitionDecision) -> ExecSpec:
+    """Lower a planning decision to its executable spec (GPU share -> fast
+    group, CPU share -> slow group, mirroring the TPU transfer)."""
+    return ExecSpec(unit=op_kind(dec.op), op=dec.op, c_fast=dec.c_gpu,
+                    c_slow=dec.c_cpu, pred_total_us=dec.pred_total_us)
+
+
 # ------------------------------------------------------------------- plan
 
 @dataclasses.dataclass
@@ -193,6 +232,17 @@ class CoexecPlan:
                 out.append(("pool", e["bytes"]))
             else:
                 out.append((e["unit"], op_from_json(e["decision"]["op"])))
+        return out
+
+    def exec_specs(self) -> List[ExecSpec]:
+        """The schedule lowered to executable specs, in unit order (the
+        input contract of `repro.runtime.executor.PlanExecutor`)."""
+        out: List[ExecSpec] = []
+        for e in self.schedule:
+            if e["unit"] == "pool":
+                out.append(ExecSpec(unit="pool", pool_bytes=int(e["bytes"])))
+            else:
+                out.append(decision_to_spec(decision_from_json(e["decision"])))
         return out
 
     def report(self) -> Optional[PlanReport]:
@@ -272,6 +322,31 @@ def plan_from_report(units: Sequence[Unit], report: PlanReport, *,
 
 # --------------------------------------------------------------------- CLI
 
+def train_mux_predictors(device: str, threads: int, *, samples: int = 400,
+                         estimators: int = 60):
+    """Train the (cpu, gpu) MuxPredictor pair the planning/executor CLIs
+    use.  Deterministic (fixed data seeds), so two CLI invocations with the
+    same knobs produce checksum-identical predictors — which is what lets
+    the executor CLI warm-hit a plan the plan CLI compiled."""
+    from repro.core.predictor import (sample_conv_ops, sample_linear_ops,
+                                      train_predictor)
+    from repro.core.predictor.gbdt import GBDTParams
+    from repro.core.predictor.train import MuxPredictor
+
+    params = GBDTParams(n_estimators=estimators)
+    lt = sample_linear_ops(samples, seed=1)
+    ct = sample_conv_ops(samples, seed=1)
+    gp = MuxPredictor(
+        train_predictor(lt, device, "gpu", whitebox=True, params=params),
+        train_predictor(ct, device, "gpu", whitebox=True, params=params))
+    cp = MuxPredictor(
+        train_predictor(lt, device, f"cpu{threads}",
+                        whitebox=False, params=params),
+        train_predictor(ct, device, f"cpu{threads}",
+                        whitebox=False, params=params))
+    return cp, gp
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     import argparse
     import time
@@ -280,10 +355,6 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     # `__main__` module; route everything through the canonical package
     # modules so all classes have a single identity.
     from repro.core.networks import NETWORKS
-    from repro.core.predictor import (sample_conv_ops, sample_linear_ops,
-                                      train_predictor)
-    from repro.core.predictor.gbdt import GBDTParams
-    from repro.core.predictor.train import MuxPredictor
     from repro.runtime.cache import PlanCache, plan_network_cached
 
     ap = argparse.ArgumentParser(
@@ -309,17 +380,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     mech = SyncMechanism(args.mechanism)
     t0 = time.time()
-    params = GBDTParams(n_estimators=args.estimators)
-    lt = sample_linear_ops(args.samples, seed=1)
-    ct = sample_conv_ops(args.samples, seed=1)
-    gp = MuxPredictor(
-        train_predictor(lt, args.device, "gpu", whitebox=True, params=params),
-        train_predictor(ct, args.device, "gpu", whitebox=True, params=params))
-    cp = MuxPredictor(
-        train_predictor(lt, args.device, f"cpu{args.threads}",
-                        whitebox=False, params=params),
-        train_predictor(ct, args.device, f"cpu{args.threads}",
-                        whitebox=False, params=params))
+    cp, gp = train_mux_predictors(args.device, args.threads,
+                                  samples=args.samples,
+                                  estimators=args.estimators)
     t_train = time.time() - t0
 
     cache = PlanCache(Path(args.cache_dir))

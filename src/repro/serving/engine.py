@@ -7,14 +7,18 @@ step-by-step with greedy/temperature sampling until max tokens.  The same
 shapes.
 
 An engine can be constructed with a compiled `CoexecPlan`
-(repro.runtime): the plan is validated lightly and exposed as
-`engine.coexec_plan`, so a deployment ships the offline partitioning
-artifact alongside the model instead of re-planning at serving time.
+(repro.runtime): a deployment ships the offline partitioning artifact
+alongside the model instead of re-planning at serving time — and the
+engine *executes* it.  `execute_plan()` lowers the plan's schedule
+(projection/linear and conv units alike) through `PlanExecutor` onto the
+co-execution mesh, keeping the per-op fidelity report on
+`engine.last_execution_report` for ops teams to compare executed against
+planned latency.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any, Dict, List, Optional
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +27,7 @@ import numpy as np
 from repro.models.config import ModelConfig
 
 if TYPE_CHECKING:
+    from repro.runtime.executor import ExecutionReport, PlanExecutor
     from repro.runtime.plan import CoexecPlan
 
 
@@ -55,8 +60,33 @@ class ServingEngine:
             raise TypeError("coexec_plan must be a repro.runtime CoexecPlan "
                             f"(got {type(coexec_plan).__name__})")
         self.coexec_plan = coexec_plan
+        self._plan_executor: Optional["PlanExecutor"] = None
+        self.last_execution_report: Optional["ExecutionReport"] = None
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+
+    @property
+    def plan_executor(self) -> "PlanExecutor":
+        """The runtime lowering of `coexec_plan` (built on first use)."""
+        if self.coexec_plan is None:
+            raise ValueError("engine was constructed without a coexec_plan")
+        if self._plan_executor is None:
+            from repro.runtime.executor import PlanExecutor
+            self._plan_executor = PlanExecutor(self.coexec_plan)
+        return self._plan_executor
+
+    def execute_plan(self, x: Optional[jax.Array] = None, *,
+                     chain: bool = True) -> Tuple[jax.Array, Any]:
+        """Execute the shipped plan on the co-execution mesh.
+
+        Runs every scheduled unit — co-executed projection (linear) and
+        conv layers channel-split across the device groups, exclusive ones
+        unsplit — and records the executed-vs-predicted fidelity report on
+        `self.last_execution_report`.  Returns (output, report).
+        """
+        y, report = self.plan_executor.run(x, chain=chain)
+        self.last_execution_report = report
+        return y, report
 
     def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
         if temperature <= 0.0:

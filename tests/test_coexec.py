@@ -17,7 +17,8 @@ try:
 except ImportError:      # graceful fallback, see hypothesis_fallback
     from hypothesis_fallback import given, settings, st
 
-from repro.core.coexec import SplitPlan, throughput_split
+from repro.core.coexec import (SplitPlan, coexec_mesh, mesh_groups,
+                               throughput_split)
 
 
 @settings(max_examples=50, deadline=None)
@@ -35,6 +36,19 @@ def test_throughput_split_invariants(c_out, share, align):
 def test_split_plan_pad_is_minimal():
     p = SplitPlan(c_out=100, c_fast=60, align=8)
     assert p.c_pad == 64        # ceil(60/8)*8
+
+
+def test_coexec_mesh_degrades_to_single_group_on_one_device():
+    """Satellite: <2 devices used to crash on reshape(2, 0); now the mesh
+    collapses to one group (the executor then runs everything exclusive).
+    This process sees the real single-device CPU platform (conftest)."""
+    import jax
+
+    mesh = coexec_mesh()
+    assert mesh_groups(mesh) == 1
+    assert mesh.devices.shape == (1, len(jax.devices()))
+    with pytest.raises(ValueError):
+        coexec_mesh([])
 
 
 _SUBPROCESS_PROG = textwrap.dedent("""
