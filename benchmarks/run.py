@@ -34,10 +34,10 @@ SUITES = {
 }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro bench")
     ap.add_argument("--only", choices=list(SUITES), default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     names = [args.only] if args.only else list(SUITES)
 
     from benchmarks.common import write_bench_report

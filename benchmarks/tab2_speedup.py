@@ -8,10 +8,10 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro
 from benchmarks.common import DEVICES, FULL, csv_row, get_predictor, plan_cache
 from repro.core.partitioner import speedup_vs_gpu_batch
 from repro.core.predictor.dataset import eval_conv_ops, eval_linear_ops
-from repro.runtime import grid_partition_ops_cached, partition_ops_cached
 
 _PAPER = {  # (device, kind, threads) -> (gbdt, search)
     ("pixel4", "linear", 3): (1.84, 1.92),
@@ -46,14 +46,18 @@ def run() -> list:
             for threads in (1, 2, 3):
                 cp = get_predictor(dev, f"cpu{threads}", kind,
                                    whitebox=False)
+                # seed=0 keeps the grid provenance identical to the
+                # pre-facade grid_partition_ops_cached default
+                target = repro.Target(device=dev, threads=threads, seed=0)
                 ops_p = _subsample(pool[kind], N_PRED, seed=threads)
-                decs = partition_ops_cached(ops_p, cp, gp, cache=cache)
+                decs = repro.compile(ops_p, target, predictors=(cp, gp),
+                                     cache=cache).decisions
                 sp = np.mean(speedup_vs_gpu_batch(decs, dev, threads))
                 # score grid search on a subset of the SAME ops so the
                 # comparison is apples-to-apples
                 ops_g = ops_p[:N_GRID]
-                gdecs = grid_partition_ops_cached(ops_g, dev, threads,
-                                                  cache=cache)
+                gdecs = repro.compile(ops_g, target, mode="grid",
+                                      cache=cache).decisions
                 sg = np.mean(speedup_vs_gpu_batch(gdecs, dev, threads))
                 paper = _PAPER.get((dev, kind, threads), ("", ""))
                 rows.append(csv_row(

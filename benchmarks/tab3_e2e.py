@@ -4,17 +4,17 @@ GPU + 3 CPU threads co-execution.
 Paper headline: up to 1.67x / 1.79x / 1.27x / 1.27x average e2e speedups on
 Pixel 4 / Pixel 5 / Moto 2022 / OnePlus 11.
 
-`--execute` additionally lowers one cached plan through
-`repro.runtime.executor.PlanExecutor` and reports executed-vs-predicted
-latency per op (predictions model the phone, execution runs on this host —
-the per-op ratio's spread is the fidelity signal).
+`--execute` additionally lowers one compiled network through the
+`repro.compile` facade and reports executed-vs-predicted latency per op
+(predictions model the phone, execution runs on this host — the per-op
+ratio's spread is the fidelity signal).
 """
 from __future__ import annotations
 
+import repro
 from benchmarks.common import DEVICES, csv_row, get_predictor, plan_cache
 from repro.core.networks import NETWORKS
 from repro.core.predictor.train import MuxPredictor
-from repro.runtime import plan_network_cached
 
 _PAPER_E2E = {
     ("pixel4", "vgg16"): 1.14, ("pixel4", "resnet18"): 1.54,
@@ -33,18 +33,19 @@ def run(execute: bool = False, exec_device: str = "moto2022",
     rows = []
     threads = 3
     cache = plan_cache()
-    plans = {}
+    compiled_networks = {}
     for dev in DEVICES:
         gp = MuxPredictor(get_predictor(dev, "gpu", "linear", whitebox=True),
                           get_predictor(dev, "gpu", "conv", whitebox=True))
         cp = MuxPredictor(
             get_predictor(dev, f"cpu{threads}", "linear", whitebox=False),
             get_predictor(dev, f"cpu{threads}", "conv", whitebox=False))
-        for name, fn in NETWORKS.items():
-            plan = plan_network_cached(fn(), cp, gp, threads=threads,
-                                       cache=cache)
-            plans[(dev, name)] = plan
-            r = plan.report()
+        target = repro.Target(device=dev, threads=threads)
+        for name in NETWORKS:
+            compiled = repro.compile(name, target, predictors=(cp, gp),
+                                     cache=cache)
+            compiled_networks[(dev, name)] = compiled
+            r = compiled.report()
             rows.append(csv_row(
                 f"tab3_{dev}_{name}", r.end_to_end_us,
                 f"base_ms={r.baseline_us/1e3:.1f},"
@@ -54,18 +55,15 @@ def run(execute: bool = False, exec_device: str = "moto2022",
     print(f"# plan cache: {cache.hits} hits / {cache.misses} misses "
           f"({cache.root})")
     if execute:
-        rows += _execute_rows(plans[(exec_device, exec_network)],
+        rows += _execute_rows(compiled_networks[(exec_device, exec_network)],
                               exec_device, exec_network, chain)
     return rows
 
 
-def _execute_rows(plan, dev: str, name: str, chain: bool) -> list:
-    """Lower one cached plan into actual split execution; one row per op
-    (executed wall us vs the plan's predicted us) plus a summary row."""
-    from repro.runtime import PlanExecutor
-
-    exe = PlanExecutor(plan)
-    _, rep = exe.run(chain=chain, warmup=True)
+def _execute_rows(compiled, dev: str, name: str, chain: bool) -> list:
+    """Lower one compiled network into actual split execution; one row per
+    op (executed wall us vs the plan's predicted us) plus a summary row."""
+    rep = compiled.profile(chain=chain, warmup=True)
     rows = []
     for t in rep.timings:
         ratio = (f"{t.wall_us / t.pred_us:.1f}" if t.pred_us > 0

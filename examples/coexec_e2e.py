@@ -1,11 +1,11 @@
 """End-to-end network co-execution planning (paper Table 3) + the
 TPU-native channel-split demo.
 
-Part 1: plan ResNet-18 across GPU + 3 CPU threads on the Moto 2022 model,
-        then EXECUTE the plan through repro.runtime.executor.PlanExecutor
-        (on this single-device host the mesh degrades to one group and
-        ops run unsplit; the fidelity summary still pairs executed wall
-        time with the plan's predictions per op).
+Part 1: compile ResNet-18 for GPU + 3 CPU threads on the Moto 2022 model
+        through the `repro.compile` facade, then EXECUTE the compiled
+        network (on this single-device host the mesh degrades to one
+        group and ops run unsplit; the fidelity summary still pairs
+        executed wall time with the plan's predictions per op).
 Part 2: run an actual uneven channel-split matmul across two device groups
         via shard_map (subprocess with 8 virtual devices).
 
@@ -20,11 +20,10 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
-from repro.core.networks import NETWORKS                   # noqa: E402
+import repro                                               # noqa: E402
 from repro.core.predictor import (sample_conv_ops,         # noqa: E402
                                   sample_linear_ops, train_predictor)
 from repro.core.predictor.train import MuxPredictor        # noqa: E402
-from repro.runtime import PlanCache, plan_network_cached   # noqa: E402
 
 
 def part1():
@@ -37,12 +36,13 @@ def part1():
     cp = MuxPredictor(
         train_predictor(lt, dev, f"cpu{threads}", whitebox=False),
         train_predictor(ct, dev, f"cpu{threads}", whitebox=False))
-    cache = PlanCache(ROOT / "reports" / "plans")
-    plan = plan_network_cached(NETWORKS["resnet18"](), cp, gp,
-                               threads=threads, cache=cache)
-    r = plan.report()
-    print(f"plan cache {'HIT' if cache.hits else 'MISS (compiled)'} "
-          f"(key {plan.key})")
+    compiled = repro.compile("resnet18",
+                             repro.Target(device=dev, threads=threads),
+                             predictors=(cp, gp),
+                             cache=ROOT / "reports" / "plans")
+    r = compiled.report()
+    print(f"plan cache {'HIT' if compiled.from_cache else 'MISS (compiled)'}"
+          f" (key {compiled.key})")
     print(f"baseline (GPU only): {r.baseline_us/1e3:.1f} ms")
     print(f"co-exec individual:  {r.individual_us/1e3:.1f} ms "
           f"({r.individual_speedup:.2f}x)")
@@ -51,11 +51,9 @@ def part1():
     co = sum(1 for d in r.decisions if not d.exclusive)
     print(f"{co}/{len(r.decisions)} ops co-executed")
 
-    from repro.runtime import PlanExecutor
-    exe = PlanExecutor(plan)
-    y, report = exe.run()
+    y = compiled.run()
     print(f"executed plan -> output {tuple(y.shape)}")
-    print(report.fidelity_summary())
+    print(compiled.last_report.fidelity_summary())
 
 
 _PART2 = textwrap.dedent("""

@@ -1,0 +1,40 @@
+"""Fine-grained CPU-GPU co-execution, reproduced — public API.
+
+The supported front door is the compile→run facade (see api.py):
+
+    import repro
+    compiled = repro.compile("resnet18", repro.Target(device="moto2022"))
+    y = compiled.run()
+
+plus the unified CLI, `python -m repro {plan,execute,bench,serve}`.
+
+Exports resolve lazily (PEP 562): `import repro` never imports jax, the
+planners, or the simulator — subsystem packages (`repro.core`,
+`repro.runtime`, `repro.kernels`, `repro.serving`, ...) keep working as
+direct imports exactly as before.
+"""
+import importlib
+
+__version__ = "0.1.0"
+
+_EXPORTS = {
+    "Target": "repro.api",
+    "CompiledNetwork": "repro.api",
+    "compile": "repro.api",
+    "MODE_PREDICTED": "repro.api",
+    "MODE_GRID": "repro.api",
+    "optimal_partition": "repro.api",        # deprecated shim (warns once)
+    "grid_search_partition": "repro.api",    # deprecated shim (warns once)
+}
+
+__all__ = sorted(_EXPORTS) + ["__version__"]
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,11 @@
+"""`python -m repro` — the unified CLI (see repro/cli.py)."""
+from repro.cli import main
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:     # e.g. `... | head` closed the pipe
+        import os
+        import sys
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        raise SystemExit(0)

@@ -1,0 +1,486 @@
+"""The compile→run facade: one stable API over planning, caching,
+execution, and serving.
+
+The paper's workflow is one pipeline — profile a device, predict per-op
+CPU/GPU latency, pick a split, execute with cheap synchronization — but the
+pieces live in four subsystems (core/partitioner, core/planner, runtime,
+serving).  This module is the single front door:
+
+    import repro
+    target = repro.Target(device="moto2022", threads=3)
+    compiled = repro.compile("resnet18", target)        # cached planning
+    y = compiled.run()                                  # split execution
+    report = compiled.profile()                         # fidelity report
+    compiled.save("resnet18.coexec.json")               # ship the artifact
+
+`Target` captures everything a plan's validity depends on at the request
+level (device, threads, sync mechanism, candidate-grid step, measurement
+seed, mesh policy) and validates itself eagerly.  `compile` resolves the
+network (name, unit list, or bare op list), trains-or-loads the mux
+predictors when the mode needs them, runs the *cached* planners
+(`plan_network_cached` / `partition_ops_plan_cached` /
+`grid_plan_network_cached` — provenance-identical to calling them
+directly, so facade and pre-facade callers share on-disk cache entries
+bit-for-bit), and returns a `CompiledNetwork`: the `CoexecPlan` plus a
+lazily-built `PlanExecutor` and save/load/explain on top.
+
+Importing this module never imports jax; execution machinery loads on the
+first `run`/`profile`/`executor` call.
+
+The unified CLI (`python -m repro` — see cli.py) and `ServingEngine
+(compiled=...)` are thin clients of this module.  The legacy single-op
+entry points are re-exported at the bottom as deprecation shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import warnings
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from repro.core.networks import NETWORKS, Unit
+from repro.core.simulator.devices import DEVICES
+from repro.core.sync import SyncMechanism
+from repro.core.types import ConvOp, LinearOp, Op
+from repro.runtime.cache import (PlanCache, grid_plan_network_cached,
+                                 partition_ops_plan_cached,
+                                 plan_network_cached)
+from repro.runtime.plan import CoexecPlan, PlanProvenance, spec_label
+
+#: compile() planning modes
+MODE_PREDICTED = "predicted"     # GBDT predictors (the deployable path)
+MODE_GRID = "grid"               # measurement-driven oracle (upper bound)
+
+#: Target.mesh policies
+MESH_AUTO = "auto"               # split when >= 2 devices, degrade otherwise
+MESH_SINGLE = "single"           # force the degraded exclusive-only mesh
+MESH_SPLIT = "split"             # require a 2-group mesh, error otherwise
+
+ARTIFACT_FORMAT = "repro.compiled_network"
+ARTIFACT_VERSION = 1
+
+DEFAULT_CACHE_DIR = "reports/plans"
+
+
+# ------------------------------------------------------------------ target
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """Where and how a network will run — the request half of provenance.
+
+    Validates eagerly: an invalid device/mechanism/step/mesh fails at
+    construction, not deep inside planning.  `mechanism` accepts either a
+    `SyncMechanism` or its string value and normalizes to the string, so
+    targets compare/serialize structurally.
+    """
+
+    device: str
+    threads: int = 3
+    mechanism: str = SyncMechanism.SVM_POLL.value
+    step: int = 8
+    seed: int = 1
+    mesh: str = MESH_AUTO
+
+    def __post_init__(self):
+        if self.device not in DEVICES:
+            raise ValueError(f"unknown device {self.device!r}; "
+                             f"choices: {sorted(DEVICES)}")
+        if isinstance(self.mechanism, SyncMechanism):
+            object.__setattr__(self, "mechanism", self.mechanism.value)
+        try:
+            SyncMechanism(self.mechanism)
+        except ValueError:
+            raise ValueError(
+                f"unknown sync mechanism {self.mechanism!r}; "
+                f"choices: {[m.value for m in SyncMechanism]}") from None
+        # exact int checks: bool is an int subclass, but threads=True would
+        # serialize as JSON `true` and split the cache key from threads=1
+        if type(self.threads) is not int or self.threads < 1:
+            raise ValueError(f"threads must be a positive int, "
+                             f"got {self.threads!r}")
+        if type(self.step) is not int or self.step < 1:
+            raise ValueError(f"step must be a positive int, "
+                             f"got {self.step!r}")
+        if self.mesh not in (MESH_AUTO, MESH_SINGLE, MESH_SPLIT):
+            raise ValueError(f"unknown mesh policy {self.mesh!r}; "
+                             f"choices: ['auto', 'single', 'split']")
+
+    @property
+    def sync_mechanism(self) -> SyncMechanism:
+        return SyncMechanism(self.mechanism)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "Target":
+        return Target(**d)
+
+
+# -------------------------------------------------------------- predictors
+
+def _trained_mux_predictors(device: str, threads: int, *, samples: int,
+                            estimators: int,
+                            cache_dir: Optional[Union[str, Path]] = None):
+    """Train (or load from `cache_dir`) the (cpu, gpu) MuxPredictor pair.
+
+    The on-disk layout is one pickle per underlying LatencyPredictor, keyed
+    by every training knob — a load is checksum-identical to a retrain, so
+    predictor caching never changes which plan-cache entry a compile hits.
+    """
+    from repro.runtime.plan import train_mux_predictors
+
+    if cache_dir is None:
+        return train_mux_predictors(device, threads, samples=samples,
+                                    estimators=estimators)
+
+    from repro.core.predictor.train import LatencyPredictor, MuxPredictor
+    root = Path(cache_dir)
+    stem = f"mux_{device}_cpu{threads}_{samples}x{estimators}"
+    paths = {role: root / f"{stem}_{role}.pkl"
+             for role in ("cpu_linear", "cpu_conv", "gpu_linear",
+                          "gpu_conv")}
+    if all(p.exists() for p in paths.values()):
+        try:
+            cp = MuxPredictor(LatencyPredictor.load(paths["cpu_linear"]),
+                              LatencyPredictor.load(paths["cpu_conv"]))
+            gp = MuxPredictor(LatencyPredictor.load(paths["gpu_linear"]),
+                              LatencyPredictor.load(paths["gpu_conv"]))
+            return cp, gp
+        except Exception:           # noqa: BLE001 — corrupt cache: retrain
+            pass
+    cp, gp = train_mux_predictors(device, threads, samples=samples,
+                                  estimators=estimators)
+    root.mkdir(parents=True, exist_ok=True)
+    cp.linear.save(paths["cpu_linear"])
+    cp.conv.save(paths["cpu_conv"])
+    gp.linear.save(paths["gpu_linear"])
+    gp.conv.save(paths["gpu_conv"])
+    return cp, gp
+
+
+# ------------------------------------------------------- network resolution
+
+def _resolve_units(network) -> Tuple[List[Unit], bool]:
+    """Normalize `compile`'s first argument to (units, is_network).
+
+    Accepts a registered network name, a unit list (("conv"/"linear"/
+    "pool", payload) tuples), or a bare op list.  Bare op lists are
+    planned per-op (no end-to-end report, threads/seed-free provenance —
+    the Table 2 contract), hence the flag.
+    """
+    if isinstance(network, str):
+        if network not in NETWORKS:
+            raise ValueError(f"unknown network {network!r}; "
+                             f"choices: {sorted(NETWORKS)}")
+        return list(NETWORKS[network]()), True
+    seq = list(network)
+    if not seq:
+        raise ValueError("cannot compile an empty network")
+    if all(isinstance(e, (LinearOp, ConvOp)) for e in seq):
+        from repro.kernels.registry import op_kind
+        return [(op_kind(op), op) for op in seq], False
+    if all(isinstance(e, tuple) and len(e) == 2 and isinstance(e[0], str)
+           for e in seq):
+        return seq, True
+    raise TypeError(
+        "network must be a registered name, a unit list "
+        "[(kind, payload), ...], or a bare op list [LinearOp/ConvOp, ...]; "
+        f"got {type(seq[0]).__name__} elements")
+
+
+# ------------------------------------------------------------------ compile
+
+def compile(network, target: Target, *,               # noqa: A001 — facade
+            mode: str = MODE_PREDICTED,
+            cache: Union[PlanCache, str, Path] = DEFAULT_CACHE_DIR,
+            predictors=None,
+            samples: int = 400, estimators: int = 60,
+            predictor_cache: Optional[Union[str, Path]] = None
+            ) -> "CompiledNetwork":
+    """Compile a network into a `CompiledNetwork` (cached planning).
+
+    * `network` — a registered name ("resnet18"), a unit list, or a bare
+      op list.
+    * `target` — the validated `Target` (device/threads/mechanism/step/
+      seed/mesh).
+    * `mode` — "predicted" plans with trained GBDT predictors (the paper's
+      deployable path); "grid" uses the measurement-driven oracle and
+      needs no predictors.
+    * `cache` — a `PlanCache` or a directory path; planning is skipped
+      entirely on a warm hit (the plan file is just read back).
+    * `predictors` — optional pre-trained (cpu, gpu) pair; when omitted in
+      "predicted" mode a deterministic pair is trained (or loaded from
+      `predictor_cache`) with `samples`/`estimators`.
+
+    Provenance is identical to the underlying cached planners, so plans
+    compiled here warm-hit entries written by pre-facade callers and vice
+    versa.
+    """
+    if not isinstance(target, Target):
+        raise TypeError(f"target must be a repro.Target, "
+                        f"got {type(target).__name__}")
+    if mode not in (MODE_PREDICTED, MODE_GRID):
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"choices: ['predicted', 'grid']")
+    units, is_network = _resolve_units(network)
+    if not isinstance(cache, PlanCache):
+        cache = PlanCache(Path(cache))
+    mech = target.sync_mechanism
+    hits_before = cache.hits
+
+    if mode == MODE_GRID:
+        if predictors is not None:
+            raise ValueError("mode='grid' is measurement-driven and takes "
+                             "no predictors; drop predictors= or use "
+                             "mode='predicted'")
+        plan = grid_plan_network_cached(
+            units, target.device, target.threads, mechanism=mech,
+            step=target.step, seed=target.seed, cache=cache)
+    else:
+        if predictors is None:
+            predictors = _trained_mux_predictors(
+                target.device, target.threads, samples=samples,
+                estimators=estimators, cache_dir=predictor_cache)
+        cpu_pred, gpu_pred = predictors
+        if gpu_pred.device != target.device:
+            raise ValueError(
+                f"predictors were trained for {gpu_pred.device!r} but the "
+                f"target device is {target.device!r}")
+        if is_network:
+            plan = plan_network_cached(
+                units, cpu_pred, gpu_pred, threads=target.threads,
+                mechanism=mech, step=target.step, seed=target.seed,
+                cache=cache)
+        else:
+            plan = partition_ops_plan_cached(
+                [payload for _, payload in units], cpu_pred, gpu_pred,
+                mechanism=mech, step=target.step, cache=cache)
+
+    return CompiledNetwork(plan=plan, target=target, mode=mode,
+                           from_cache=cache.hits > hits_before,
+                           predictors=predictors)
+
+
+# --------------------------------------------------------- compiled network
+
+def _artifact_checksum(doc: Dict[str, Any]) -> str:
+    # .get, not [] — a truncated artifact must surface as the checksum
+    # ValueError in from_json, not a KeyError from in here
+    body = {k: doc.get(k) for k in ("format", "version", "mode", "target",
+                                    "plan")}
+    blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.blake2b(blob.encode(), digest_size=16).hexdigest()
+
+
+class CompiledNetwork:
+    """The compile-once / run-many artifact: plan + lazily-built executor.
+
+    Owns the `CoexecPlan` (schedule + provenance), the `Target` it was
+    compiled for, and provenance extras (`mode`, `from_cache`).  Execution
+    state (`PlanExecutor`, jax, the mesh) is built on first use and memoized
+    per (dtype, chain-independent) configuration, so a compiled network is
+    cheap to construct, serialize, and ship.
+    """
+
+    def __init__(self, plan: CoexecPlan, target: Target, *,
+                 mode: str = MODE_PREDICTED, from_cache: bool = False,
+                 predictors=None):
+        self.plan = plan
+        self.target = target
+        self.mode = mode
+        self.from_cache = from_cache
+        self.predictors = predictors      # (cpu, gpu) when mode needed them
+        self.last_report = None           # ExecutionReport of the last run
+        self._executors: Dict[Tuple, Any] = {}
+
+    # --------------------------------------------------------- accessors
+    @property
+    def provenance(self) -> PlanProvenance:
+        return self.plan.provenance
+
+    @property
+    def key(self) -> str:
+        return self.plan.key
+
+    @property
+    def units(self) -> List[Unit]:
+        return self.plan.units
+
+    @property
+    def decisions(self):
+        return self.plan.decisions
+
+    def report(self):
+        """The planning-time `PlanReport` (None for bare-op plans)."""
+        return self.plan.report()
+
+    def __repr__(self) -> str:
+        return (f"CompiledNetwork(mode={self.mode!r}, "
+                f"device={self.target.device!r}, key={self.key!r}, "
+                f"units={len(self.plan.schedule)})")
+
+    # --------------------------------------------------------- execution
+    def _mesh(self):
+        from repro.core.coexec import coexec_mesh, mesh_groups
+        mesh = coexec_mesh()
+        if self.target.mesh == MESH_SINGLE and mesh_groups(mesh) != 1:
+            import jax
+            mesh = coexec_mesh(jax.devices()[:1])
+        elif self.target.mesh == MESH_SPLIT and mesh_groups(mesh) != 2:
+            raise RuntimeError(
+                "target requires a 2-group split mesh but only a degraded "
+                "single-group mesh is available (need >= 2 devices)")
+        return mesh
+
+    def executor(self, *, dtype="float32", seed: int = 0,
+                 use_pallas: bool = False):
+        """The (memoized) `PlanExecutor` lowering of this plan."""
+        import jax.numpy as jnp
+
+        from repro.runtime.executor import PlanExecutor
+        dt = jnp.dtype(dtype)
+        key = (dt.name, seed, use_pallas, self.target.mesh)
+        if key not in self._executors:
+            self._executors[key] = PlanExecutor(
+                self.plan, mesh=self._mesh(), dtype=dt, seed=seed,
+                use_pallas=use_pallas)
+        return self._executors[key]
+
+    def run(self, x=None, *, dtype="float32", chain: bool = True,
+            warmup: bool = False, seed: int = 0, use_pallas: bool = False):
+        """Execute the plan once; returns the output activation.
+
+        The per-op `ExecutionReport` of this run is kept on
+        `self.last_report` (and `profile()` is the report-first spelling).
+        """
+        exe = self.executor(dtype=dtype, seed=seed, use_pallas=use_pallas)
+        y, report = exe.run(x, chain=chain, warmup=warmup)
+        self.last_report = report
+        return y
+
+    def profile(self, x=None, *, dtype="float32", chain: bool = True,
+                warmup: bool = True, seed: int = 0,
+                use_pallas: bool = False):
+        """Execute the plan and return the executed-vs-predicted
+        `ExecutionReport` (warmed up by default so timings are
+        steady-state, not tracing + compilation)."""
+        exe = self.executor(dtype=dtype, seed=seed, use_pallas=use_pallas)
+        _, report = exe.run(x, chain=chain, warmup=warmup)
+        self.last_report = report
+        return report
+
+    # ------------------------------------------------------------ explain
+    def explain(self) -> str:
+        """Per-op decision table: what the planner chose and why it costs
+        what it costs (pure plan introspection, no execution)."""
+        prov = self.provenance
+        lines = [
+            f"CompiledNetwork [{self.mode}] device={prov.device} "
+            f"cpu{prov.threads} mechanism={prov.mechanism} "
+            f"step={prov.step} planner={prov.planner}",
+            f"  key={self.key}  fingerprint={prov.network_fingerprint}",
+            f"  {'idx':>3}  {'label':<42} {'cpu':>5}/{'gpu':<5} "
+            f"{'pred_us':>9}  placement",
+        ]
+        n_co = 0
+        for i, spec in enumerate(self.plan.exec_specs()):
+            label = spec_label(spec)     # same renderer as execute --per-op
+            if spec.unit == "pool":
+                lines.append(f"  {i:>3}  {label:<42} {'-':>5}/{'-':<5} "
+                             f"{'-':>9}  gpu (no sync)")
+                continue
+            c_cpu, c_gpu = spec.c_slow, spec.c_fast
+            if spec.coexec:
+                placement = "co-executed"
+                n_co += 1
+            elif c_gpu:
+                placement = "gpu-only"
+            else:
+                placement = "cpu-only"
+            lines.append(f"  {i:>3}  {label:<42} {c_cpu:>5}/"
+                         f"{c_gpu:<5} {spec.pred_total_us:>9.1f}  "
+                         f"{placement}")
+        n_ops = sum(1 for e in self.plan.schedule if e["unit"] != "pool")
+        tail = f"  {n_co}/{n_ops} ops co-executed"
+        if self.plan.end_to_end_us is not None:
+            speedup = self.plan.baseline_us / self.plan.end_to_end_us
+            tail += (f" | baseline {self.plan.baseline_us / 1e3:.1f} ms -> "
+                     f"end-to-end {self.plan.end_to_end_us / 1e3:.1f} ms "
+                     f"({speedup:.2f}x)")
+        lines.append(tail)
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------- codecs
+    def to_json(self) -> Dict[str, Any]:
+        doc = {"format": ARTIFACT_FORMAT, "version": ARTIFACT_VERSION,
+               "mode": self.mode, "target": self.target.to_json(),
+               "plan": self.plan.to_json()}
+        doc["checksum"] = _artifact_checksum(doc)
+        return doc
+
+    @staticmethod
+    def from_json(doc: Dict[str, Any]) -> "CompiledNetwork":
+        if doc.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(f"not a {ARTIFACT_FORMAT} artifact "
+                             f"(format={doc.get('format')!r})")
+        if doc.get("version") != ARTIFACT_VERSION:
+            raise ValueError(f"unsupported artifact version "
+                             f"{doc.get('version')!r}")
+        if doc.get("checksum") != _artifact_checksum(doc):
+            raise ValueError("artifact checksum mismatch: the file was "
+                             "modified after it was saved")
+        return CompiledNetwork(plan=CoexecPlan.from_json(doc["plan"]),
+                               target=Target.from_json(doc["target"]),
+                               mode=doc["mode"])
+
+    def save(self, path: Union[str, Path]) -> Path:
+        """Write the shippable artifact (target + plan + checksum) as
+        JSON; `CompiledNetwork.load` round-trips it exactly."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1))
+        return path
+
+    @staticmethod
+    def load(path: Union[str, Path]) -> "CompiledNetwork":
+        return CompiledNetwork.from_json(json.loads(Path(path).read_text()))
+
+
+# ------------------------------------------------------------- deprecation
+
+#: entry points that already warned this process (one warning per spelling)
+_DEPRECATED_SEEN: set = set()
+
+
+def _warn_once(old: str, new: str) -> None:
+    """Emit a DeprecationWarning for `old` exactly once per process."""
+    if old in _DEPRECATED_SEEN:
+        return
+    _DEPRECATED_SEEN.add(old)
+    warnings.warn(f"{old} is deprecated; use {new} instead",
+                  DeprecationWarning, stacklevel=3)
+
+
+def optimal_partition(op: Op, cpu_pred, gpu_pred, *,
+                      mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                      step: int = 8):
+    """Deprecated single-op wrapper; use `repro.compile([op], target)`."""
+    _warn_once("repro.api.optimal_partition",
+               "repro.compile([op], Target(...), mode='predicted')")
+    from repro.core.partitioner import optimal_partition as _impl
+    return _impl(op, cpu_pred, gpu_pred, mechanism=mechanism, step=step)
+
+
+def grid_search_partition(op: Op, device: str, threads: int, *,
+                          mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                          step: int = 8, seed: int = 0):
+    """Deprecated single-op wrapper; use `repro.compile([op], target,
+    mode='grid')`."""
+    _warn_once("repro.api.grid_search_partition",
+               "repro.compile([op], Target(...), mode='grid')")
+    from repro.core.partitioner import grid_search_partition as _impl
+    return _impl(op, device, threads, mechanism=mechanism, step=step,
+                 seed=seed)

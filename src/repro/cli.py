@@ -1,0 +1,208 @@
+"""`python -m repro` — one CLI over the compile→run facade.
+
+Subcommands:
+
+  * `plan`    — compile (or fetch from cache) a co-execution plan; can
+                also write the plan JSON (`--out`) and the shippable
+                `CompiledNetwork` artifact (`--save`).
+  * `execute` — compile (or load an artifact) and run the plan end to end,
+                reporting executed-vs-predicted fidelity per op.
+  * `bench`   — forward to the paper benchmark driver (`benchmarks.run`).
+  * `serve`   — forward to the serving launcher (`repro.launch.serve`).
+
+`plan` and `execute` are thin clients of `repro.compile`; their provenance
+(and therefore their on-disk cache entries) is bit-identical to the
+retired `python -m repro.runtime.plan` / `python -m repro.runtime.executor`
+CLIs, which now forward here with a DeprecationWarning.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+from typing import Optional, Sequence
+
+
+def _add_compile_args(ap: argparse.ArgumentParser) -> None:
+    from repro.core.networks import NETWORKS
+    from repro.core.simulator.devices import DEVICES
+    from repro.core.sync import SyncMechanism
+
+    ap.add_argument("--network", default="resnet18",
+                    choices=sorted(NETWORKS))
+    ap.add_argument("--device", default="moto2022", choices=sorted(DEVICES))
+    ap.add_argument("--threads", type=int, default=3)
+    ap.add_argument("--mechanism", default="svm_poll",
+                    choices=[m.value for m in SyncMechanism])
+    ap.add_argument("--step", type=int, default=8,
+                    help="candidate-grid step (channels)")
+    ap.add_argument("--mode", default="predicted",
+                    choices=["predicted", "grid"],
+                    help="predicted = GBDT planning (deployable); "
+                         "grid = measurement-driven oracle")
+    ap.add_argument("--cache-dir", default="reports/plans",
+                    help="on-disk PlanCache directory")
+    ap.add_argument("--samples", type=int, default=400,
+                    help="training ops per predictor (simulator-measured)")
+    ap.add_argument("--estimators", type=int, default=60,
+                    help="GBDT trees per predictor")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--predictor-cache", default=None,
+                    help="optional directory to cache trained predictors "
+                         "(a load is checksum-identical to a retrain)")
+
+
+def _compile(args):
+    from repro.api import Target, compile as _api_compile
+    target = Target(device=args.device, threads=args.threads,
+                    mechanism=args.mechanism, step=args.step,
+                    seed=args.seed)
+    t0 = time.time()
+    compiled = _api_compile(args.network, target, mode=args.mode,
+                            cache=args.cache_dir, samples=args.samples,
+                            estimators=args.estimators,
+                            predictor_cache=args.predictor_cache)
+    return compiled, time.time() - t0
+
+
+def _cache_status(compiled) -> str:
+    return "HIT" if compiled.from_cache else "MISS (compiled)"
+
+
+def _cmd_plan(args) -> int:
+    from repro.runtime.cache import PlanCache
+    compiled, dt = _compile(args)
+    plan = compiled.plan
+    n_co = sum(1 for d in plan.decisions if not d.exclusive)
+    print(f"plan {args.network} on {args.device} (cpu{args.threads}, "
+          f"{args.mechanism}, {args.mode}): cache {_cache_status(compiled)}")
+    print(f"  compiled in {dt:.1f}s (predictors + planning; a warm hit is "
+          f"a pure JSON read)")
+    print(f"  key {plan.key} -> "
+          f"{PlanCache(Path(args.cache_dir)).path_for(plan.provenance)}")
+    if plan.end_to_end_us is not None:
+        print(f"  baseline (GPU only): {plan.baseline_us / 1e3:.1f} ms | "
+              f"end-to-end co-exec: {plan.end_to_end_us / 1e3:.1f} ms "
+              f"({plan.baseline_us / plan.end_to_end_us:.2f}x)")
+    print(f"  {n_co}/{len(plan.decisions)} ops co-executed")
+    # write artifacts before the explain dump: a consumer closing the pipe
+    # early (`... | head`) must not be able to skip the requested writes
+    if args.out:
+        plan.save(Path(args.out))
+        print(f"  wrote plan {args.out}")
+    if args.save:
+        compiled.save(args.save)
+        print(f"  wrote artifact {args.save}")
+    if args.explain:
+        print(compiled.explain())
+    return 0
+
+
+def _cmd_execute(args) -> int:
+    if args.artifact:
+        from repro.api import CompiledNetwork
+        compiled = CompiledNetwork.load(args.artifact)
+        print(f"execute artifact {args.artifact} "
+              f"(device {compiled.target.device}, key {compiled.key})")
+    else:
+        compiled, _ = _compile(args)
+        print(f"execute {args.network} on {args.device} plan "
+              f"{compiled.key} (cache {_cache_status(compiled)})")
+    exe = compiled.executor()
+    groups = ("2-group split mesh" if exe.split_capable
+              else "degraded single-group mesh (exclusive execution)")
+    print(f"  {groups}")
+    report = compiled.profile(chain=not args.no_chain,
+                              warmup=not args.no_warmup)
+    if args.per_op:
+        for t in report.timings:
+            extra = " chained" if t.chained_input else ""
+            print(f"  [{t.index:02d}] {t.label:42s} {t.mode:9s} "
+                  f"{t.c_fast}/{t.c_slow} wall {t.wall_us:9.0f}us "
+                  f"pred {t.pred_us:8.1f}us{extra}")
+    print(report.fidelity_summary())
+    return 0
+
+
+def _cmd_bench(rest: Sequence[str]) -> int:
+    # benchmarks/ lives at the repo root (it is not an installed package);
+    # running from the checkout works directly, an installed interpreter
+    # needs the cwd fallback
+    try:
+        from benchmarks.run import main as bench_main
+    except ImportError:
+        sys.path.insert(0, str(Path.cwd()))
+        try:
+            from benchmarks.run import main as bench_main
+        except ImportError:
+            print("error: cannot import benchmarks.run — run `python -m "
+                  "repro bench` from the repository root", file=sys.stderr)
+            return 2
+    return bench_main(list(rest)) or 0
+
+
+def _cmd_serve(rest: Sequence[str]) -> int:
+    from repro.launch.serve import serve_main
+    return serve_main(list(rest)) or 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # bench/serve forward their whole tail verbatim; dispatch before
+    # argparse so leading options (`serve --arch ...`) survive (argparse
+    # REMAINDER refuses option-looking tokens in first position)
+    if argv[:1] == ["bench"]:
+        return _cmd_bench(argv[1:])
+    if argv[:1] == ["serve"]:
+        return _cmd_serve(argv[1:])
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Fine-grained CPU-GPU co-execution: compile, run, "
+                    "benchmark, serve.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_plan = sub.add_parser(
+        "plan", help="compile (or fetch from cache) a co-execution plan")
+    _add_compile_args(p_plan)
+    p_plan.add_argument("--out", default=None,
+                        help="also write the plan JSON to this path")
+    p_plan.add_argument("--save", default=None,
+                        help="write the shippable CompiledNetwork artifact "
+                             "(plan + target + checksum) to this path")
+    p_plan.add_argument("--explain", action="store_true",
+                        help="print the per-op decision table")
+
+    p_exec = sub.add_parser(
+        "execute", help="execute a compiled plan end to end and report "
+                        "executed-vs-predicted fidelity")
+    _add_compile_args(p_exec)
+    p_exec.add_argument("--artifact", default=None,
+                        help="execute a saved CompiledNetwork artifact "
+                             "instead of compiling")
+    p_exec.add_argument("--no-chain", action="store_true",
+                        help="gather after every co-executed op "
+                             "(no elision)")
+    p_exec.add_argument("--no-warmup", action="store_true",
+                        help="skip the untimed warmup pass (timings then "
+                             "include tracing + compilation)")
+    p_exec.add_argument("--per-op", action="store_true",
+                        help="print one line per executed unit")
+
+    # bench/serve exist here only so `python -m repro --help` lists them;
+    # their real dispatch is the verbatim-forward intercept above
+    sub.add_parser("bench",
+                   help="run paper benchmark suites (forwards to "
+                        "benchmarks.run; e.g. --only tab3)")
+    sub.add_parser("serve",
+                   help="serve batched requests (forwards to "
+                        "repro.launch.serve; e.g. --arch gemma3_12b)")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "plan":
+        return _cmd_plan(args)
+    return _cmd_execute(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,23 +7,42 @@
  - sync         synchronization overhead models (event vs fine-grained SVM)
  - coexec       TPU-native uneven channel-split execution (shard_map)
  - networks     op graphs of the paper's end-to-end evaluation models
-"""
-from repro.core.types import ConvOp, LinearOp, Op
-from repro.core.sync import (SyncMechanism, collective_overhead_us,
-                             sync_overhead_us)
-from repro.core.partitioner import (PartitionDecision, grid_search_partition,
-                                    optimal_partition, realized_latency_us,
-                                    speedup_vs_gpu)
-from repro.core.planner import PlanReport, plan_network
-from repro.core.coexec import (SplitPlan, coexec_matmul, coexec_mesh,
-                               pack_weights, throughput_split)
 
-__all__ = [
-    "ConvOp", "LinearOp", "Op",
-    "SyncMechanism", "sync_overhead_us", "collective_overhead_us",
-    "PartitionDecision", "grid_search_partition", "optimal_partition",
-    "realized_latency_us", "speedup_vs_gpu",
-    "PlanReport", "plan_network",
-    "SplitPlan", "coexec_matmul", "coexec_mesh", "pack_weights",
-    "throughput_split",
-]
+Exports resolve lazily (PEP 562) so importing any `repro.core.*` submodule
+(which executes this package __init__) does not drag in jax via coexec —
+the api facade's Target validation and artifact codecs stay jax-free.
+"""
+import importlib
+
+_EXPORTS = {
+    "ConvOp": "repro.core.types",
+    "LinearOp": "repro.core.types",
+    "Op": "repro.core.types",
+    "SyncMechanism": "repro.core.sync",
+    "collective_overhead_us": "repro.core.sync",
+    "sync_overhead_us": "repro.core.sync",
+    "PartitionDecision": "repro.core.partitioner",
+    "grid_search_partition": "repro.core.partitioner",
+    "optimal_partition": "repro.core.partitioner",
+    "realized_latency_us": "repro.core.partitioner",
+    "speedup_vs_gpu": "repro.core.partitioner",
+    "PlanReport": "repro.core.planner",
+    "plan_network": "repro.core.planner",
+    "SplitPlan": "repro.core.coexec",
+    "coexec_matmul": "repro.core.coexec",
+    "coexec_mesh": "repro.core.coexec",
+    "pack_weights": "repro.core.coexec",
+    "throughput_split": "repro.core.coexec",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -17,11 +17,11 @@ measurements are per-row, so batch composition cannot change the argmin.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.predictor.train import LatencyPredictor, measure_ops
+from repro.core.predictor.train import LatencyPredictor
 from repro.core.simulator.measure import (measure_latency_us,
                                           measure_latency_us_batch)
 from repro.core.sync import SyncMechanism, sync_overhead_us

@@ -21,7 +21,7 @@ per-candidate (or per-op) Python loops on the scoring hot path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 import numpy as np
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import pickle
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 

@@ -10,7 +10,7 @@ thread-chunk granularity.
 from __future__ import annotations
 
 from repro.core.simulator.devices import DeviceSpec
-from repro.core.types import ConvOp, LinearOp, Op
+from repro.core.types import LinearOp, Op
 
 _MR, _NR = 6, 8            # XNNPACK f32 NEON GEMM register tile
 _L2_BYTES = 1.5e6          # per-core effective L2/SLC working-set knee

@@ -20,7 +20,6 @@ lives in measure.py.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 from repro.core.simulator.devices import DeviceSpec

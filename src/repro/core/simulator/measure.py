@@ -9,15 +9,14 @@ numbers are only meaningful against noisy observations.
 from __future__ import annotations
 
 import hashlib
-import math
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 
 from repro.core.simulator.cpu_model import cpu_latency_us
-from repro.core.simulator.devices import DEVICES, DeviceSpec
-from repro.core.simulator.gpu_model import dispatch_for, gpu_latency_us
-from repro.core.types import ConvOp, LinearOp, Op
+from repro.core.simulator.devices import DEVICES
+from repro.core.simulator.gpu_model import gpu_latency_us
+from repro.core.types import Op
 
 _NOISE_SIGMA = 0.030
 

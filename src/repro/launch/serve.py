@@ -1,12 +1,20 @@
 """Serving launcher: batched requests through the ServingEngine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3_12b --reduced \
+    PYTHONPATH=src python -m repro serve --arch gemma3_12b --reduced \
         --requests 8 --max-new 12
+
+`--compiled <artifact>` additionally ships a `repro.CompiledNetwork`
+artifact (saved by `python -m repro plan --save ...`) with the engine and
+executes it once after serving, printing the per-op fidelity summary.
+
+`python -m repro.launch.serve` still works but is deprecated in favor of
+the unified `python -m repro serve`.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
@@ -15,21 +23,32 @@ from repro.models import ARCH_IDS, build_model, get_config
 from repro.serving import Request, ServingEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def serve_main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro serve")
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    ap.add_argument("--compiled", default=None,
+                    help="CompiledNetwork artifact to ship with the engine "
+                         "(executed once after serving; see `python -m "
+                         "repro plan --save`)")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    compiled = None
+    if args.compiled:
+        from repro.api import CompiledNetwork
+        compiled = CompiledNetwork.load(args.compiled)
+        print(f"shipping compiled plan {compiled.key} "
+              f"(device {compiled.target.device})")
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -45,7 +64,7 @@ def main():
                             temperature=args.temperature, frames=frames))
 
     engine = ServingEngine(cfg, model, params, max_batch=args.max_batch,
-                           max_len=64 + args.max_new)
+                           max_len=64 + args.max_new, compiled=compiled)
     t0 = time.time()
     completions = engine.run(reqs)
     dt = time.time() - t0
@@ -55,6 +74,18 @@ def main():
     print(f"{len(completions)} completions, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s on host CPU)")
 
+    if compiled is not None:
+        _, report = engine.execute_plan()
+        print(report.fidelity_summary())
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """Deprecated CLI shim: forwards to `python -m repro serve`."""
+    from repro.api import _warn_once
+    _warn_once("python -m repro.launch.serve", "python -m repro serve")
+    return serve_main(argv)
+
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

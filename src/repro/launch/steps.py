@@ -6,12 +6,11 @@ which is what dryrun.py lowers against.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.data import make_batch
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, init_adamw
 from repro.launch.shapes import InputShape

@@ -23,7 +23,7 @@ from repro.launch.steps import make_train_step
 from repro.models import ARCH_IDS, build_model, get_config
 from repro.optim import AdamWConfig, init_adamw
 from repro.sharding.ctx import activation_mesh
-from repro.sharding.rules import batch_shardings, param_shardings, replicated
+from repro.sharding.rules import param_shardings
 
 
 def main():

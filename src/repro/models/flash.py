@@ -20,8 +20,6 @@ only O(T * D) residuals per layer instead of O(T * S) probabilities.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ EncDecModel):
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.models.config import ModelConfig
 from repro.models.encdec import EncDecModel

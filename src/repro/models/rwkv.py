@@ -6,7 +6,7 @@ itself is sequential and is never split (DESIGN.md §Arch-applicability).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,9 @@ import importlib
 _EXPORTS = {
     "PlanCache": "repro.runtime.cache",
     "grid_partition_ops_cached": "repro.runtime.cache",
+    "grid_plan_network_cached": "repro.runtime.cache",
     "partition_ops_cached": "repro.runtime.cache",
+    "partition_ops_plan_cached": "repro.runtime.cache",
     "plan_network_cached": "repro.runtime.cache",
     "PLAN_SCHEMA_VERSION": "repro.runtime.plan",
     "CoexecPlan": "repro.runtime.plan",

@@ -100,12 +100,19 @@ def _ops_as_units(ops: Sequence[Op]) -> List[Unit]:
             for op in ops]
 
 
-def partition_ops_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
-                         mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
-                         step: int = 8,
-                         cache: PlanCache) -> List[PartitionDecision]:
-    """Predictor-driven partitioning of a bare op list through the cache
-    (the Table 2 sweeps); decisions come back in op order."""
+def partition_ops_plan_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
+                              mechanism: SyncMechanism =
+                              SyncMechanism.SVM_POLL,
+                              step: int = 8,
+                              cache: PlanCache) -> CoexecPlan:
+    """Predictor-driven partitioning of a bare op list through the cache,
+    returned as the full `CoexecPlan` artifact (the Table 2 sweeps and
+    `repro.compile(ops, ...)` go through here).
+
+    Bare op lists carry no thread count or measurement seed in their
+    provenance (threads=0, seed=0): predictions are deterministic and the
+    CPU predictor already embeds its thread count in the checksum.
+    """
     units = _ops_as_units(ops)
     prov = PlanProvenance(
         device=gpu_pred.device, threads=0, mechanism=mechanism.value,
@@ -114,12 +121,52 @@ def partition_ops_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
         planner=PLANNER_PREDICTOR)
     hit = cache.get(prov)
     if hit is not None:
-        return hit.decisions
+        return hit
     decisions = optimal_partition_batch(ops, cpu_pred, gpu_pred,
                                         mechanism=mechanism, step=step)
-    cache.put(CoexecPlan(provenance=prov,
-                         schedule=build_schedule(units, decisions)))
-    return decisions
+    plan = CoexecPlan(provenance=prov,
+                      schedule=build_schedule(units, decisions))
+    cache.put(plan)
+    return plan
+
+
+def partition_ops_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
+                         mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                         step: int = 8,
+                         cache: PlanCache) -> List[PartitionDecision]:
+    """Predictor-driven partitioning of a bare op list through the cache;
+    decisions come back in op order (thin wrapper over the plan-returning
+    variant — identical provenance, so the two share cache entries)."""
+    return partition_ops_plan_cached(ops, cpu_pred, gpu_pred,
+                                     mechanism=mechanism, step=step,
+                                     cache=cache).decisions
+
+
+def grid_plan_network_cached(units: Sequence[Unit], device: str,
+                             threads: int, *,
+                             mechanism: SyncMechanism =
+                             SyncMechanism.SVM_POLL,
+                             step: int = 8, seed: int = 0,
+                             cache: PlanCache) -> CoexecPlan:
+    """Measurement-driven (oracle) planning of a unit list through the
+    cache; keyed by planner="grid" with no predictor checksum (none is
+    involved).  Pool units pass through into the schedule unsplit."""
+    units = list(units)
+    prov = PlanProvenance(
+        device=device, threads=threads, mechanism=mechanism.value,
+        step=step, seed=seed, network_fingerprint=network_fingerprint(units),
+        predictor_checksum="", planner=PLANNER_GRID)
+    hit = cache.get(prov)
+    if hit is not None:
+        return hit
+    ops = [payload for kind, payload in units if kind != "pool"]
+    decisions = grid_search_partition_batch(ops, device, threads,
+                                            mechanism=mechanism, step=step,
+                                            seed=seed)
+    plan = CoexecPlan(provenance=prov,
+                      schedule=build_schedule(units, decisions))
+    cache.put(plan)
+    return plan
 
 
 def grid_partition_ops_cached(ops: Sequence[Op], device: str, threads: int, *,
@@ -127,19 +174,9 @@ def grid_partition_ops_cached(ops: Sequence[Op], device: str, threads: int, *,
                               SyncMechanism.SVM_POLL,
                               step: int = 8, seed: int = 0,
                               cache: PlanCache) -> List[PartitionDecision]:
-    """Measurement-driven (oracle) partitioning through the cache; keyed by
-    planner="grid" with no predictor checksum (none is involved)."""
-    units = _ops_as_units(ops)
-    prov = PlanProvenance(
-        device=device, threads=threads, mechanism=mechanism.value,
-        step=step, seed=seed, network_fingerprint=network_fingerprint(units),
-        predictor_checksum="", planner=PLANNER_GRID)
-    hit = cache.get(prov)
-    if hit is not None:
-        return hit.decisions
-    decisions = grid_search_partition_batch(ops, device, threads,
-                                            mechanism=mechanism, step=step,
-                                            seed=seed)
-    cache.put(CoexecPlan(provenance=prov,
-                         schedule=build_schedule(units, decisions)))
-    return decisions
+    """Measurement-driven (oracle) partitioning of a bare op list through
+    the cache (wrapper over `grid_plan_network_cached` on ops-as-units —
+    identical provenance, shared cache entries)."""
+    return grid_plan_network_cached(_ops_as_units(ops), device, threads,
+                                    mechanism=mechanism, step=step,
+                                    seed=seed, cache=cache).decisions

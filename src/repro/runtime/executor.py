@@ -51,7 +51,8 @@ from repro.core.coexec import (SplitPlan, coexec_conv2d, coexec_matmul,
                                pack_weights, split_for_mesh)
 from repro.core.networks import Unit, pool_out_edge, unit_input_shape
 from repro.kernels import registry
-from repro.runtime.plan import CoexecPlan, ExecSpec, network_fingerprint
+from repro.runtime.plan import (CoexecPlan, ExecSpec, network_fingerprint,
+                                spec_label)
 
 
 # -------------------------------------------------------------- reporting
@@ -100,14 +101,23 @@ class ExecutionReport:
 
     def fidelity_summary(self) -> str:
         n = len(self.timings)
-        ratio = self.wall_us / max(self.predicted_us, 1e-9)
+        if n == 0:
+            return (f"fidelity: 0 units (empty schedule), "
+                    f"{self.reshard_points} reshard points "
+                    f"({self.elided} elided)")
+        # guard the ratio: schedules with no predicted latency at all
+        # (e.g. pool-only) must not divide by ~zero into a garbage figure
+        if self.predicted_us > 0.0:
+            ratio = f"(x{self.wall_us / self.predicted_us:.2f})"
+        else:
+            ratio = "(ratio n/a: no predicted latency)"
         return (f"fidelity: {n} units ({self.count('coexec')} co-executed, "
                 f"{self.count('exclusive')} exclusive, "
                 f"{self.count('pool')} pool), "
                 f"{self.reshard_points} reshard points "
                 f"({self.elided} elided), "
                 f"executed {self.wall_us / 1e3:.1f} ms vs predicted "
-                f"{self.predicted_us / 1e3:.1f} ms (x{ratio:.2f})")
+                f"{self.predicted_us / 1e3:.1f} ms {ratio}")
 
     def to_json(self) -> Dict[str, Any]:
         return {"device": self.device,
@@ -119,16 +129,6 @@ class ExecutionReport:
                 "wall_us": self.wall_us,
                 "predicted_us": self.predicted_us,
                 "timings": [t.to_json() for t in self.timings]}
-
-
-def spec_label(spec: ExecSpec) -> str:
-    if spec.unit == "pool":
-        return f"pool {spec.pool_bytes}B"
-    op = spec.op
-    if spec.unit == "linear":
-        return f"linear {op.L}x{op.C_in}->{op.C_out}"
-    return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
-            f"K{op.K} S{op.S}")
 
 
 # ------------------------------------------------------------- activations
@@ -389,61 +389,19 @@ class PlanExecutor:
 # --------------------------------------------------------------------- CLI
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    import argparse
+    """Deprecated CLI shim: forwards to `python -m repro execute`.
 
-    from repro.core.networks import NETWORKS
-    from repro.core.simulator.devices import DEVICES
-    from repro.core.sync import SyncMechanism
-    from repro.runtime.cache import PlanCache, plan_network_cached
-    from repro.runtime.plan import train_mux_predictors
+    Flags are a strict subset of the unified CLI's, and the provenance it
+    builds is identical — it warm-hits the same plan-cache entries.
+    """
+    import sys
 
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.runtime.executor",
-        description="Execute a compiled co-execution plan end to end and "
-                    "report executed-vs-predicted fidelity per op.")
-    ap.add_argument("--network", default="resnet18", choices=sorted(NETWORKS))
-    ap.add_argument("--device", default="moto2022", choices=sorted(DEVICES))
-    ap.add_argument("--threads", type=int, default=3)
-    ap.add_argument("--mechanism", default="svm_poll",
-                    choices=[m.value for m in SyncMechanism])
-    ap.add_argument("--cache-dir", default="reports/plans")
-    ap.add_argument("--samples", type=int, default=400)
-    ap.add_argument("--estimators", type=int, default=60)
-    ap.add_argument("--seed", type=int, default=1)
-    ap.add_argument("--no-chain", action="store_true",
-                    help="gather after every co-executed op (no elision)")
-    ap.add_argument("--no-warmup", action="store_true",
-                    help="skip the untimed warmup pass (timings then "
-                         "include tracing + compilation)")
-    ap.add_argument("--per-op", action="store_true",
-                    help="print one line per executed unit")
-    args = ap.parse_args(argv)
+    from repro.api import _warn_once
+    from repro.cli import main as _cli_main
 
-    from pathlib import Path
-    mech = SyncMechanism(args.mechanism)
-    cp, gp = train_mux_predictors(args.device, args.threads,
-                                  samples=args.samples,
-                                  estimators=args.estimators)
-    cache = PlanCache(Path(args.cache_dir))
-    plan = plan_network_cached(NETWORKS[args.network](), cp, gp,
-                               threads=args.threads, mechanism=mech,
-                               seed=args.seed, cache=cache)
-    status = "HIT" if cache.hits else "MISS (compiled)"
-    exe = PlanExecutor(plan)
-    groups = "2-group split mesh" if exe.split_capable else \
-        "degraded single-group mesh (exclusive execution)"
-    print(f"execute {args.network} on {args.device} plan {plan.key} "
-          f"(cache {status}; {groups})")
-    _, report = exe.run(chain=not args.no_chain,
-                        warmup=not args.no_warmup)
-    if args.per_op:
-        for t in report.timings:
-            extra = " chained" if t.chained_input else ""
-            print(f"  [{t.index:02d}] {t.label:42s} {t.mode:9s} "
-                  f"{t.c_fast}/{t.c_slow} wall {t.wall_us:9.0f}us "
-                  f"pred {t.pred_us:8.1f}us{extra}")
-    print(report.fidelity_summary())
-    return 0
+    _warn_once("python -m repro.runtime.executor", "python -m repro execute")
+    rest = list(sys.argv[1:] if argv is None else argv)
+    return _cli_main(["execute", *rest])
 
 
 if __name__ == "__main__":

@@ -196,6 +196,19 @@ def decision_to_spec(dec: PartitionDecision) -> ExecSpec:
                     c_slow=dec.c_cpu, pred_total_us=dec.pred_total_us)
 
 
+def spec_label(spec: ExecSpec) -> str:
+    """Human-readable label of one spec — the one format shared by the
+    executor's per-op timings and `CompiledNetwork.explain()` (lives here,
+    not in executor.py, so label rendering stays jax-free)."""
+    if spec.unit == "pool":
+        return f"pool {spec.pool_bytes}B"
+    op = spec.op
+    if spec.unit == "linear":
+        return f"linear {op.L}x{op.C_in}->{op.C_out}"
+    return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
+            f"K{op.K} S{op.S}")
+
+
 # ------------------------------------------------------------------- plan
 
 @dataclasses.dataclass
@@ -348,65 +361,20 @@ def train_mux_predictors(device: str, threads: int, *, samples: int = 400,
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    import argparse
-    import time
+    """Deprecated CLI shim: forwards to `python -m repro plan`.
 
-    # When executed as `python -m repro.runtime.plan` this file is the
-    # `__main__` module; route everything through the canonical package
-    # modules so all classes have a single identity.
-    from repro.core.networks import NETWORKS
-    from repro.runtime.cache import PlanCache, plan_network_cached
+    Flags are a strict subset of the unified CLI's, and the provenance it
+    builds is identical — a plan compiled by the old spelling warm-hits
+    the same cache entry under the new one (and vice versa).
+    """
+    import sys
 
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.runtime.plan",
-        description="Compile (or fetch from cache) a co-execution plan.")
-    from repro.core.simulator.devices import DEVICES
-    ap.add_argument("--network", default="resnet18", choices=sorted(NETWORKS))
-    ap.add_argument("--device", default="moto2022",
-                    choices=sorted(DEVICES))
-    ap.add_argument("--threads", type=int, default=3)
-    ap.add_argument("--mechanism", default="svm_poll",
-                    choices=[m.value for m in SyncMechanism])
-    ap.add_argument("--cache-dir", default="reports/plans",
-                    help="on-disk PlanCache directory")
-    ap.add_argument("--out", default=None,
-                    help="also write the plan JSON to this path")
-    ap.add_argument("--samples", type=int, default=400,
-                    help="training ops per predictor (simulator-measured)")
-    ap.add_argument("--estimators", type=int, default=60,
-                    help="GBDT trees per predictor")
-    ap.add_argument("--seed", type=int, default=1)
-    args = ap.parse_args(argv)
+    from repro.api import _warn_once
+    from repro.cli import main as _cli_main
 
-    mech = SyncMechanism(args.mechanism)
-    t0 = time.time()
-    cp, gp = train_mux_predictors(args.device, args.threads,
-                                  samples=args.samples,
-                                  estimators=args.estimators)
-    t_train = time.time() - t0
-
-    cache = PlanCache(Path(args.cache_dir))
-    t0 = time.time()
-    plan = plan_network_cached(NETWORKS[args.network](), cp, gp,
-                               threads=args.threads, mechanism=mech,
-                               seed=args.seed, cache=cache)
-    t_plan = time.time() - t0
-
-    status = "HIT" if cache.hits else "MISS (compiled)"
-    n_co = sum(1 for d in plan.decisions if not d.exclusive)
-    print(f"plan {args.network} on {args.device} "
-          f"(cpu{args.threads}, {mech.value}): cache {status}")
-    print(f"  predictors trained in {t_train:.1f}s, "
-          f"plan obtained in {t_plan*1e3:.0f} ms")
-    print(f"  key {plan.key} -> {cache.path_for(plan.provenance)}")
-    print(f"  baseline (GPU only): {plan.baseline_us/1e3:.1f} ms | "
-          f"end-to-end co-exec: {plan.end_to_end_us/1e3:.1f} ms "
-          f"({plan.baseline_us/plan.end_to_end_us:.2f}x)")
-    print(f"  {n_co}/{len(plan.decisions)} ops co-executed")
-    if args.out:
-        plan.save(Path(args.out))
-        print(f"  wrote {args.out}")
-    return 0
+    _warn_once("python -m repro.runtime.plan", "python -m repro plan")
+    rest = list(sys.argv[1:] if argv is None else argv)
+    return _cli_main(["plan", *rest])
 
 
 if __name__ == "__main__":

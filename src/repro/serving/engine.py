@@ -6,19 +6,21 @@ step-by-step with greedy/temperature sampling until max tokens.  The same
 `prefill`/`decode_step` functions are what the dry-run lowers at production
 shapes.
 
-An engine can be constructed with a compiled `CoexecPlan`
-(repro.runtime): a deployment ships the offline partitioning artifact
-alongside the model instead of re-planning at serving time — and the
-engine *executes* it.  `execute_plan()` lowers the plan's schedule
-(projection/linear and conv units alike) through `PlanExecutor` onto the
-co-execution mesh, keeping the per-op fidelity report on
-`engine.last_execution_report` for ops teams to compare executed against
-planned latency.
+An engine can be constructed with a `repro.CompiledNetwork`
+(`compiled=...`, the facade artifact — preferred) or a bare `CoexecPlan`
+(`coexec_plan=...`, the pre-facade spelling, still supported): a
+deployment ships the offline partitioning artifact alongside the model
+instead of re-planning at serving time — and the engine *executes* it.
+`execute_plan()` lowers the plan's schedule (projection/linear and conv
+units alike) through `PlanExecutor` onto the co-execution mesh, keeping
+the per-op fidelity report on `engine.last_execution_report` for ops
+teams to compare executed against planned latency.  With `compiled=` the
+engine shares the compiled network's memoized executor.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,16 +51,28 @@ class Completion:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, model, params, *,
                  max_batch: int = 4, max_len: int = 128, seed: int = 0,
-                 coexec_plan: Optional["CoexecPlan"] = None):
+                 coexec_plan: Optional["CoexecPlan"] = None,
+                 compiled=None):
         self.cfg = cfg
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.rng = jax.random.PRNGKey(seed)
-        if coexec_plan is not None and not hasattr(coexec_plan, "provenance"):
+        if compiled is not None and coexec_plan is not None:
+            raise ValueError("pass either compiled= (a repro.CompiledNetwork)"
+                             " or coexec_plan= (a bare CoexecPlan), not both")
+        if compiled is not None:
+            if not (hasattr(compiled, "plan") and hasattr(compiled, "target")
+                    and hasattr(compiled, "executor")):
+                raise TypeError("compiled must be a repro.CompiledNetwork "
+                                f"(got {type(compiled).__name__})")
+            coexec_plan = compiled.plan
+        elif coexec_plan is not None and \
+                not hasattr(coexec_plan, "provenance"):
             raise TypeError("coexec_plan must be a repro.runtime CoexecPlan "
                             f"(got {type(coexec_plan).__name__})")
+        self.compiled = compiled
         self.coexec_plan = coexec_plan
         self._plan_executor: Optional["PlanExecutor"] = None
         self.last_execution_report: Optional["ExecutionReport"] = None
@@ -67,12 +81,18 @@ class ServingEngine:
 
     @property
     def plan_executor(self) -> "PlanExecutor":
-        """The runtime lowering of `coexec_plan` (built on first use)."""
+        """The runtime lowering of the shipped plan (built on first use;
+        shared with the CompiledNetwork's memoized executor when one was
+        passed)."""
         if self.coexec_plan is None:
-            raise ValueError("engine was constructed without a coexec_plan")
+            raise ValueError("engine was constructed without a compiled "
+                             "network or coexec_plan")
         if self._plan_executor is None:
-            from repro.runtime.executor import PlanExecutor
-            self._plan_executor = PlanExecutor(self.coexec_plan)
+            if self.compiled is not None:
+                self._plan_executor = self.compiled.executor()
+            else:
+                from repro.runtime.executor import PlanExecutor
+                self._plan_executor = PlanExecutor(self.coexec_plan)
         return self._plan_executor
 
     def execute_plan(self, x: Optional[jax.Array] = None, *,

@@ -21,7 +21,7 @@ Strategy (2D "data x model", optionally with a leading "pod" axis):
 from __future__ import annotations
 
 import re
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

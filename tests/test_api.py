@@ -1,0 +1,420 @@
+"""Tests for the repro.api compile→run facade.
+
+Covers: Target validation, facade/pre-facade planning equivalence (bit-
+identical plans and shared cache entries), CompiledNetwork save/load
+round-trips (fp32 and bf16, with run-output equality), artifact integrity
+checksums, the once-per-entry-point deprecation shims, the
+fidelity-summary guards for empty/all-exclusive schedules, ServingEngine
+`compiled=`, and the unified CLI warm-hitting the legacy CLI's cache.
+"""
+import json
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro import api
+from repro.core.networks import NETWORKS
+from repro.core.partitioner import (grid_search_partition_batch,
+                                    optimal_partition_batch)
+from repro.core.predictor import sample_conv_ops, sample_linear_ops, \
+    train_predictor
+from repro.core.predictor.gbdt import GBDTParams
+from repro.core.predictor.train import MuxPredictor
+from repro.core.sync import SyncMechanism
+from repro.core.types import ConvOp, LinearOp
+from repro.runtime import (PlanCache, grid_partition_ops_cached,
+                           partition_ops_cached, plan_network_cached)
+
+_FAST = GBDTParams(n_estimators=40, max_depth=6, learning_rate=0.2)
+
+
+def _small_units():
+    return [("conv", ConvOp(28, 28, 32, 64, 3, 1)),
+            ("pool", 4 * 14 * 14 * 64),
+            ("conv", ConvOp(14, 14, 64, 96, 3, 1)),
+            ("linear", LinearOp(1, 96, 128))]
+
+
+@pytest.fixture(scope="module")
+def mux_predictors():
+    lt = sample_linear_ops(250, seed=1)
+    ct = sample_conv_ops(250, seed=1)
+    dev = "moto2022"
+    gp = MuxPredictor(
+        train_predictor(lt, dev, "gpu", whitebox=True, params=_FAST),
+        train_predictor(ct, dev, "gpu", whitebox=True, params=_FAST))
+    cp = MuxPredictor(
+        train_predictor(lt, dev, "cpu3", whitebox=False, params=_FAST),
+        train_predictor(ct, dev, "cpu3", whitebox=False, params=_FAST))
+    return cp, gp
+
+
+@pytest.fixture()
+def target():
+    return api.Target(device="moto2022", threads=3)
+
+
+# ---------------------------------------------------------------- target
+
+def test_target_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown device"):
+        api.Target(device="iphone99")
+    with pytest.raises(ValueError, match="unknown sync mechanism"):
+        api.Target(device="pixel5", mechanism="telepathy")
+    with pytest.raises(ValueError, match="threads"):
+        api.Target(device="pixel5", threads=0)
+    with pytest.raises(ValueError, match="step"):
+        api.Target(device="pixel5", step=0)
+    with pytest.raises(ValueError, match="mesh policy"):
+        api.Target(device="pixel5", mesh="hexagonal")
+    # bool is an int subclass but would serialize as JSON `true` and split
+    # the cache key from the equivalent int target
+    with pytest.raises(ValueError, match="threads"):
+        api.Target(device="pixel5", threads=True)
+    with pytest.raises(ValueError, match="step"):
+        api.Target(device="pixel5", step=True)
+
+
+def test_target_normalizes_mechanism_and_roundtrips():
+    t = api.Target(device="pixel5", mechanism=SyncMechanism.EVENT)
+    assert t.mechanism == "event"
+    assert t.sync_mechanism is SyncMechanism.EVENT
+    assert api.Target.from_json(t.to_json()) == t
+
+
+def test_compile_rejects_bad_inputs(target):
+    with pytest.raises(ValueError, match="unknown network"):
+        api.compile("not_a_net", target)
+    with pytest.raises(ValueError, match="unknown mode"):
+        api.compile("resnet18", target, mode="psychic")
+    with pytest.raises(TypeError, match="repro.Target"):
+        api.compile("resnet18", {"device": "moto2022"})
+    with pytest.raises(ValueError, match="empty"):
+        api.compile([], target)
+    with pytest.raises(ValueError, match="no predictors"):
+        api.compile(_small_units(), target, mode="grid",
+                    predictors=("cp", "gp"))
+
+
+# ---------------------------------------- facade / pre-facade equivalence
+
+def test_compile_network_is_bit_identical_to_cached_planner(
+        mux_predictors, target, tmp_path):
+    """Acceptance: facade plans == direct plan_network_cached plans, and
+    the two share on-disk cache entries (facade warm-hits a plan written
+    by the pre-facade entry point)."""
+    cp, gp = mux_predictors
+    legacy_cache = PlanCache(tmp_path)
+    legacy = plan_network_cached(_small_units(), cp, gp, threads=3,
+                                 cache=legacy_cache)
+
+    compiled = api.compile(_small_units(), target, predictors=(cp, gp),
+                           cache=tmp_path)
+    assert compiled.from_cache          # warm-hit the legacy entry
+    assert compiled.key == legacy.key
+    assert compiled.plan.provenance == legacy.provenance
+    assert compiled.plan.schedule == legacy.schedule
+    assert compiled.decisions == legacy.decisions
+    assert compiled.plan.end_to_end_us == legacy.end_to_end_us
+
+
+def test_compile_network_name_matches_unit_list(mux_predictors, target,
+                                                tmp_path):
+    cp, gp = mux_predictors
+    by_name = api.compile("resnet18", target, predictors=(cp, gp),
+                          cache=tmp_path)
+    by_units = api.compile(NETWORKS["resnet18"](), target,
+                           predictors=(cp, gp), cache=tmp_path)
+    assert by_units.from_cache
+    assert by_name.key == by_units.key
+
+
+def test_compile_bare_ops_matches_partition_ops_cached(mux_predictors,
+                                                       target, tmp_path):
+    cp, gp = mux_predictors
+    ops = [LinearOp(50, 768, 640), ConvOp(28, 28, 64, 96, 3, 1),
+           LinearOp(8, 256, 1000)]
+    legacy = partition_ops_cached(ops, cp, gp, cache=PlanCache(tmp_path))
+    compiled = api.compile(ops, target, predictors=(cp, gp),
+                           cache=tmp_path)
+    assert compiled.from_cache
+    assert compiled.decisions == legacy
+    assert compiled.decisions == optimal_partition_batch(ops, cp, gp)
+    # bare-op provenance stays threads/seed-free (the Table 2 contract)
+    assert compiled.provenance.threads == 0
+    assert compiled.provenance.seed == 0
+    assert compiled.report() is None
+
+
+def test_compile_grid_matches_grid_search(target, tmp_path):
+    ops = [LinearOp(50, 768, 640), ConvOp(14, 14, 128, 130, 1, 1)]
+    t0 = api.Target(device="moto2022", threads=3, seed=0)
+    legacy = grid_partition_ops_cached(ops, "moto2022", 3,
+                                       cache=PlanCache(tmp_path))
+    compiled = api.compile(ops, t0, mode="grid", cache=tmp_path)
+    assert compiled.from_cache
+    assert compiled.decisions == legacy
+    assert compiled.decisions == grid_search_partition_batch(
+        ops, "moto2022", 3)
+    assert compiled.provenance.planner == "grid"
+    assert compiled.provenance.predictor_checksum == ""
+
+
+def test_compile_grid_network_includes_pools(target, tmp_path):
+    compiled = api.compile(_small_units(), target, mode="grid",
+                           cache=tmp_path)
+    assert compiled.units == _small_units()
+    assert len(compiled.decisions) == 3
+    # grid plans execute like any other plan
+    y = compiled.run()
+    assert y.shape == (1, 128)
+
+
+# -------------------------------------------------------- artifact codecs
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_save_load_roundtrip_with_run_equality(mux_predictors, target,
+                                               tmp_path, dtype):
+    """Satellite: provenance digest, target fields, and .run() output all
+    survive a save/load cycle, in fp32 and bf16."""
+    cp, gp = mux_predictors
+    compiled = api.compile(_small_units(), target, predictors=(cp, gp),
+                           cache=tmp_path)
+    path = tmp_path / "artifact" / "net.coexec.json"
+    compiled.save(path)
+
+    back = api.CompiledNetwork.load(path)
+    assert back.key == compiled.key                      # provenance digest
+    assert back.provenance == compiled.provenance
+    assert back.target == compiled.target                # every field
+    assert back.mode == compiled.mode
+    assert back.plan.schedule == compiled.plan.schedule
+
+    y0 = np.asarray(compiled.run(dtype=dtype))
+    y1 = np.asarray(back.run(dtype=dtype))
+    np.testing.assert_array_equal(y0, y1)
+
+
+def test_artifact_checksum_rejects_tampering(mux_predictors, target,
+                                             tmp_path):
+    cp, gp = mux_predictors
+    compiled = api.compile(_small_units(), target, predictors=(cp, gp),
+                           cache=tmp_path)
+    path = tmp_path / "net.coexec.json"
+    compiled.save(path)
+
+    doc = json.loads(path.read_text())
+    doc["plan"]["schedule"][0]["decision"]["c_cpu"] += 8
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="checksum"):
+        api.CompiledNetwork.load(path)
+
+    with pytest.raises(ValueError, match="artifact"):
+        api.CompiledNetwork.from_json({"format": "something_else"})
+    # truncated artifact (valid format/version, missing body keys) must
+    # surface as the checksum ValueError, not a KeyError
+    with pytest.raises(ValueError, match="checksum"):
+        api.CompiledNetwork.from_json(
+            {"format": "repro.compiled_network", "version": 1})
+
+
+def test_explain_lists_every_unit(mux_predictors, target, tmp_path):
+    cp, gp = mux_predictors
+    compiled = api.compile(_small_units(), target, predictors=(cp, gp),
+                           cache=tmp_path)
+    text = compiled.explain()
+    assert "co-executed" in text or "gpu-only" in text or "cpu-only" in text
+    assert "pool" in text
+    assert compiled.key in text
+    # one row per schedule unit plus header/summary
+    assert len(text.splitlines()) == len(compiled.plan.schedule) + 4
+
+
+# ------------------------------------------------- fidelity summary guards
+
+def _report(timings):
+    from repro.runtime.executor import ExecutionReport
+    return ExecutionReport(device="moto2022", network_fingerprint="x",
+                           chain=True, split_capable=False,
+                           timings=timings, reshard_points=0, elided=0)
+
+
+def test_fidelity_summary_empty_schedule_has_no_nan():
+    rep = _report([])
+    text = rep.fidelity_summary()
+    assert "0 units" in text
+    for bad in ("nan", "inf", "x0.00"):
+        assert bad not in text.lower()
+
+
+def test_fidelity_summary_all_exclusive_zero_prediction():
+    """Satellite regression: no co-executed ops and zero predicted latency
+    must not divide by (near-)zero into a garbage ratio."""
+    from repro.runtime.executor import OpTiming
+    rep = _report([OpTiming(index=0, unit="pool", label="pool 64B",
+                            mode="pool", c_fast=0, c_slow=0,
+                            chained_input=False, gathered_output=True,
+                            wall_us=12.5, pred_us=0.0)])
+    text = rep.fidelity_summary()
+    assert "n/a" in text
+    assert "nan" not in text.lower()
+    # the old formula produced wall/1e-9 ~ 1e10 ratios; nothing like that
+    assert "e+" not in text and "x125" not in text
+
+
+# ------------------------------------------------------ deprecation shims
+
+def test_api_single_op_wrappers_warn_exactly_once(mux_predictors):
+    cp, gp = mux_predictors
+    op = LinearOp(50, 768, 640)
+
+    api._DEPRECATED_SEEN.clear()
+    with pytest.warns(DeprecationWarning, match="optimal_partition"):
+        dec = api.optimal_partition(op, cp, gp)
+    from repro.core.partitioner import optimal_partition as core_impl
+    assert dec == core_impl(op, cp, gp)
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        api.optimal_partition(op, cp, gp)          # second call: silent
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+    with pytest.warns(DeprecationWarning, match="grid_search_partition"):
+        api.grid_search_partition(op, "moto2022", 3, step=640)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        api.grid_search_partition(op, "moto2022", 3, step=640)
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+@pytest.mark.parametrize("module_name, match", [
+    ("repro.runtime.plan", "repro plan"),
+    ("repro.runtime.executor", "repro execute"),
+])
+def test_cli_shims_warn_exactly_once(module_name, match):
+    import importlib
+    mod = importlib.import_module(module_name)
+
+    api._DEPRECATED_SEEN.clear()
+    with pytest.warns(DeprecationWarning, match=match), \
+            pytest.raises(SystemExit):
+        mod.main(["--help"])                       # forwards to the new CLI
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with pytest.raises(SystemExit):
+            mod.main(["--help"])
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ------------------------------------------------------------- integrations
+
+class _Model:                          # never traced: jit is lazy
+    @staticmethod
+    def prefill(params, toks, cache):
+        raise NotImplementedError
+
+    @staticmethod
+    def decode_step(params, tok, cache, pos):
+        raise NotImplementedError
+
+
+def test_serving_engine_accepts_compiled(mux_predictors, target, tmp_path):
+    from repro.serving.engine import ServingEngine
+
+    cp, gp = mux_predictors
+    compiled = api.compile(_small_units(), target, predictors=(cp, gp),
+                           cache=tmp_path)
+    eng = ServingEngine(cfg=None, model=_Model, params={},
+                        compiled=compiled)
+    assert eng.compiled is compiled
+    assert eng.coexec_plan is compiled.plan
+    # the engine shares the compiled network's memoized executor
+    assert eng.plan_executor is compiled.executor()
+
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(cfg=None, model=_Model, params={},
+                      compiled=compiled, coexec_plan=compiled.plan)
+    with pytest.raises(TypeError, match="CompiledNetwork"):
+        ServingEngine(cfg=None, model=_Model, params={},
+                      compiled={"not": "compiled"})
+
+
+# --------------------------------------------------------------------- CLI
+
+def test_unified_cli_warm_hits_legacy_cli_cache(tmp_path, capsys):
+    """Acceptance: `python -m repro plan` warm-hits the same on-disk cache
+    entry the deprecated `python -m repro.runtime.plan` CLI wrote."""
+    from repro import cli
+    from repro.runtime import plan as legacy_plan
+
+    args = ["--network", "resnet18", "--device", "moto2022",
+            "--threads", "3", "--samples", "60", "--estimators", "10",
+            "--cache-dir", str(tmp_path)]
+
+    api._DEPRECATED_SEEN.clear()
+    with pytest.warns(DeprecationWarning):
+        assert legacy_plan.main(args) == 0         # cold compile via shim
+    cold = capsys.readouterr().out
+    assert "cache MISS" in cold
+
+    assert cli.main(["plan", *args]) == 0          # warm via the facade CLI
+    warm = capsys.readouterr().out
+    assert "cache HIT" in warm
+    # same provenance key on both paths
+    key = [ln for ln in cold.splitlines() if "key " in ln][0].split()[1]
+    assert key in warm
+    assert len(list(tmp_path.glob("*.json"))) == 1
+
+
+def test_import_repro_and_target_stay_jax_free():
+    """The facade's import-light contract: importing repro, validating a
+    Target, and compiling (planning is numpy-only) never import jax."""
+    import os
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    code = ("import sys, repro; repro.Target(device='pixel5'); "
+            "import repro.api; "
+            "assert 'jax' not in sys.modules, 'jax was imported'; "
+            "print('jax-free')")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "jax-free" in out.stdout
+
+
+def test_python_dash_m_repro_help():
+    import os
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    out = subprocess.run([sys.executable, "-m", "repro", "--help"],
+                         env=env, capture_output=True, text=True,
+                         timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    for sub in ("plan", "execute", "bench", "serve"):
+        assert sub in out.stdout
+
+
+def test_cli_plan_writes_artifact_and_execute_loads_it(tmp_path, capsys):
+    from repro import cli
+
+    art = tmp_path / "net.coexec.json"
+    args = ["--network", "resnet18", "--device", "moto2022",
+            "--threads", "3", "--samples", "60", "--estimators", "10",
+            "--cache-dir", str(tmp_path)]
+    assert cli.main(["plan", *args, "--save", str(art)]) == 0
+    capsys.readouterr()
+    assert art.exists()
+
+    assert cli.main(["execute", "--artifact", str(art),
+                     "--no-warmup"]) == 0
+    out = capsys.readouterr().out
+    assert "fidelity:" in out
