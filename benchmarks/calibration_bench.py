@@ -1,0 +1,82 @@
+"""Calibration microbench — pre/post-calibration fidelity on a fixed-seed
+executed plan.
+
+Executes a compiled resnet18 plan twice (one untimed warmup before the
+first run), records every per-op `MeasurementRecord` into the shared
+store (`reports/measurements/`), fits a `Calibrator`, and reports
+
+  * the executed-vs-predicted fidelity error (Σ |log wall/pred|) before
+    and after calibration, and their ratio — the headline number this
+    suite tracks across PRs;
+  * the calibrated replan's predicted gain and decision-change count.
+
+Everything is fixed-seed (compile seed, executor params/input seeds), so
+the only nondeterminism is host wall-clock jitter — which is exactly what
+calibration absorbs.  The JSON report embeds the raw records
+(`benchmarks.common.load_bench_measurements("calibration")` reads them
+back).
+
+    PYTHONPATH=src python -m benchmarks.calibration_bench
+"""
+from __future__ import annotations
+
+import repro
+from benchmarks.common import (PRED_CACHE, csv_row, measurement_store,
+                               plan_cache)
+from repro.measure import Calibrator, fidelity_error
+
+NETWORK = "resnet18"
+DEVICE = "moto2022"
+THREADS = 3
+RUNS = 2
+
+#: records collected by the last `run()` (embedded in the JSON report)
+_collected: list = []
+
+
+def measurements() -> list:
+    """The records the last `run()` collected (what the report embeds)."""
+    return list(_collected)
+
+
+def run() -> list:
+    target = repro.Target(device=DEVICE, threads=THREADS)
+    compiled = repro.compile(NETWORK, target, samples=200, estimators=40,
+                             cache=plan_cache(),
+                             predictor_cache=str(PRED_CACHE))
+    store = measurement_store()
+    # the memoized executor warms up once; later records are steady-state
+    reports = [compiled.record(store=store) for _ in range(RUNS)]
+    records = [t for rep in reports for t in rep.timings]
+    _collected[:] = records
+
+    cal = Calibrator.fit(records)
+    pre = fidelity_error(records)
+    post = cal.fidelity_error(records)
+    ratio = pre / max(post, 1e-9)
+    recompiled, diff = compiled.replan(cal, store=store, cache=plan_cache())
+
+    print(f"# plan {compiled.key} -> replanned {recompiled.key} "
+          f"under calibration {cal.version}")
+    return [
+        csv_row("calibration_pre_error", pre,
+                f"records={len(records)},runs={RUNS},"
+                f"net={NETWORK},dev={DEVICE}"),
+        csv_row("calibration_post_error", post,
+                f"corrections={len(cal.corrections)},"
+                f"calibration={cal.version}"),
+        csv_row("calibration_fidelity_ratio", ratio,
+                "pre/post,higher=better"),
+        csv_row("calibration_replan_gain", diff.predicted_gain_us,
+                f"changed={len(diff.changes)}/{diff.n_ops},"
+                f"new_key={diff.new_key}"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main("calibration", run,
+               extra={"network": NETWORK, "exec_device": DEVICE,
+                      "runs": RUNS},
+               measurements_fn=measurements)

@@ -30,6 +30,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.core.predictor import (LatencyPredictor, sample_conv_ops,   # noqa: E402
                                   sample_linear_ops, train_predictor)
 from repro.core.predictor.gbdt import GBDTParams                      # noqa: E402
+from repro.measure import MeasurementRecord, MeasurementStore         # noqa: E402
 from repro.runtime import PlanCache                                   # noqa: E402
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -37,11 +38,17 @@ REPORTS = ROOT / "reports"
 PRED_CACHE = REPORTS / "predictors"
 PLAN_CACHE_DIR = REPORTS / "plans"
 BENCH_REPORTS = REPORTS / "bench"
+MEASUREMENTS_DIR = REPORTS / "measurements"
 
 
 def plan_cache() -> PlanCache:
     """Fresh handle on the shared on-disk plan cache (counters start at 0)."""
     return PlanCache(PLAN_CACHE_DIR)
+
+
+def measurement_store() -> MeasurementStore:
+    """Handle on the shared on-disk measurement store (JSONL per plan)."""
+    return MeasurementStore(MEASUREMENTS_DIR)
 
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
 N_TRAIN = 10_000 if FULL else 2_500
@@ -106,8 +113,16 @@ def parse_rows(rows: List[str]) -> List[Dict[str, object]]:
 
 
 def write_bench_report(suite: str, rows: List[str], *,
-                       extra: Optional[Dict[str, object]] = None) -> Path:
-    """Persist one suite's results as reports/bench/<suite>.json."""
+                       extra: Optional[Dict[str, object]] = None,
+                       measurements: Optional[List[MeasurementRecord]] = None
+                       ) -> Path:
+    """Persist one suite's results as reports/bench/<suite>.json.
+
+    `measurements` embeds unified-schema records in the report (the
+    executor/calibration suites carry their raw per-op measurements
+    alongside the derived CSV rows); `load_bench_measurements` reads them
+    back as `MeasurementRecord`s.
+    """
     doc = {
         "suite": suite,
         "device": platform.processor() or platform.machine(),
@@ -120,6 +135,8 @@ def write_bench_report(suite: str, rows: List[str], *,
         "full": FULL,
         "metrics": parse_rows(rows),
     }
+    if measurements:
+        doc["measurements"] = [r.to_json() for r in measurements]
     if extra:
         doc.update(extra)
     BENCH_REPORTS.mkdir(parents=True, exist_ok=True)
@@ -128,12 +145,28 @@ def write_bench_report(suite: str, rows: List[str], *,
     return path
 
 
+def load_bench_measurements(suite: str) -> List[MeasurementRecord]:
+    """The unified-schema records a suite's JSON report embedded (empty
+    for suites that only wrote CSV rows)."""
+    path = BENCH_REPORTS / f"{suite}.json"
+    if not path.exists():
+        return []
+    doc = json.loads(path.read_text())
+    return [MeasurementRecord.from_json(d)
+            for d in doc.get("measurements", [])]
+
+
 def bench_main(suite: str, run_fn, *,
-               extra: Optional[Dict[str, object]] = None) -> List[str]:
+               extra: Optional[Dict[str, object]] = None,
+               measurements_fn=None) -> List[str]:
     """Standalone-script entry point: print CSV rows AND write the JSON
-    report (used by every tab*/fig* script's __main__)."""
+    report (used by every tab*/fig* script's __main__).  A suite that
+    collects unified-schema measurements passes `measurements_fn` (called
+    after `run_fn`, returns the records to embed)."""
     rows = [str(r) for r in run_fn()]
     print("\n".join(rows))
-    path = write_bench_report(suite, rows, extra=extra)
+    measurements = measurements_fn() if measurements_fn else None
+    path = write_bench_report(suite, rows, extra=extra,
+                              measurements=measurements)
     print(f"# wrote {path.relative_to(ROOT)}")
     return rows

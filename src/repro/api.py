@@ -62,6 +62,7 @@ ARTIFACT_FORMAT = "repro.compiled_network"
 ARTIFACT_VERSION = 1
 
 DEFAULT_CACHE_DIR = "reports/plans"
+DEFAULT_MEASUREMENTS_DIR = "reports/measurements"
 
 
 # ------------------------------------------------------------------ target
@@ -294,6 +295,7 @@ class CompiledNetwork:
         self.from_cache = from_cache
         self.predictors = predictors      # (cpu, gpu) when mode needed them
         self.last_report = None           # ExecutionReport of the last run
+        self.calibration = None           # Calibrator from recalibrate()
         self._executors: Dict[Tuple, Any] = {}
 
     # --------------------------------------------------------- accessors
@@ -371,6 +373,73 @@ class CompiledNetwork:
         _, report = exe.run(x, chain=chain, warmup=warmup)
         self.last_report = report
         return report
+
+    # ------------------------------------- measurement & adaptive replan
+    def _store(self, store):
+        from repro.measure import MeasurementStore
+        if isinstance(store, MeasurementStore):
+            return store
+        return MeasurementStore(Path(store))
+
+    def record(self, x=None, *, store=DEFAULT_MEASUREMENTS_DIR,
+               dtype="float32", chain: bool = True, warmup: bool = True,
+               seed: int = 0, use_pallas: bool = False):
+        """Execute the plan and append its per-op `MeasurementRecord`s to
+        the measurement store (keyed by this plan's provenance digest).
+
+        Returns the `ExecutionReport`; the accumulated records are what
+        `recalibrate()` fits on.
+        """
+        report = self.profile(x, dtype=dtype, chain=chain, warmup=warmup,
+                              seed=seed, use_pallas=use_pallas)
+        self._store(store).append(report)
+        return report
+
+    def recalibrate(self, store=DEFAULT_MEASUREMENTS_DIR):
+        """Fit a `Calibrator` from every execution recorded for this plan
+        and keep it on `self.calibration` (replan() uses it).
+
+        Raises ValueError when nothing was recorded yet — call
+        `record()` (ideally ≥2 runs) first.
+        """
+        from repro.measure import Calibrator
+        records = self._store(store).load(self.key)
+        if not records:
+            raise ValueError(
+                f"no recorded executions for plan {self.key}; call "
+                f"record() first (>= 2 runs give a stable fit)")
+        self.calibration = Calibrator.fit(records)
+        return self.calibration
+
+    def replan(self, calibrator=None, *, store=DEFAULT_MEASUREMENTS_DIR,
+               cache: Union[PlanCache, str, Path] = DEFAULT_CACHE_DIR):
+        """Re-plan with calibrated predictors; returns
+        (new CompiledNetwork, PlanDiff).
+
+        Uses `calibrator`, falling back to `self.calibration`, falling
+        back to `recalibrate(store)`.  The new plan lands in the plan
+        cache under a new provenance digest (calibration version folded
+        in); the old entry is untouched.
+        """
+        if self.mode != MODE_PREDICTED or self.predictors is None:
+            raise ValueError(
+                "replan() needs the (cpu, gpu) predictors of a "
+                "mode='predicted' compile; grid plans are "
+                "measurement-driven and artifacts carry no predictors")
+        cal = calibrator or self.calibration or self.recalibrate(store)
+        if not isinstance(cache, PlanCache):
+            cache = PlanCache(Path(cache))
+        from repro.measure.replan import replan as _replan
+        cpu_pred, gpu_pred = self.predictors
+        hits_before = cache.hits
+        new_plan, diff = _replan(self.plan, cpu_pred, gpu_pred, cal,
+                                 cache=cache)
+        compiled = CompiledNetwork(plan=new_plan, target=self.target,
+                                   mode=self.mode,
+                                   from_cache=cache.hits > hits_before,
+                                   predictors=self.predictors)
+        compiled.calibration = cal
+        return compiled, diff
 
     # ------------------------------------------------------------ explain
     def explain(self) -> str:

@@ -2,13 +2,16 @@
 
 Subcommands:
 
-  * `plan`    — compile (or fetch from cache) a co-execution plan; can
-                also write the plan JSON (`--out`) and the shippable
-                `CompiledNetwork` artifact (`--save`).
-  * `execute` — compile (or load an artifact) and run the plan end to end,
-                reporting executed-vs-predicted fidelity per op.
-  * `bench`   — forward to the paper benchmark driver (`benchmarks.run`).
-  * `serve`   — forward to the serving launcher (`repro.launch.serve`).
+  * `plan`      — compile (or fetch from cache) a co-execution plan; can
+                  also write the plan JSON (`--out`) and the shippable
+                  `CompiledNetwork` artifact (`--save`).
+  * `execute`   — compile (or load an artifact) and run the plan end to
+                  end, reporting executed-vs-predicted fidelity per op.
+  * `calibrate` — close the loop: execute + record measurements, fit a
+                  `Calibrator`, replan with corrected predictors, and
+                  print the plan diff.
+  * `bench`     — forward to the paper benchmark driver (`benchmarks.run`).
+  * `serve`     — forward to the serving launcher (`repro.launch.serve`).
 
 `plan` and `execute` are thin clients of `repro.compile`; their provenance
 (and therefore their on-disk cache entries) is bit-identical to the
@@ -125,6 +128,48 @@ def _cmd_execute(args) -> int:
     return 0
 
 
+def _cmd_calibrate(args) -> int:
+    from repro.measure import MeasurementStore, fidelity_error
+
+    if args.mode != "predicted":
+        print("error: calibrate needs mode='predicted' (grid plans are "
+              "measurement-driven; there are no predictors to calibrate)",
+              file=sys.stderr)
+        return 2
+    compiled, dt = _compile(args)
+    print(f"calibrate {args.network} on {args.device} (cpu{args.threads}, "
+          f"{args.mechanism}): plan {compiled.key} "
+          f"(cache {_cache_status(compiled)}, {dt:.1f}s)")
+    store = MeasurementStore(Path(args.store_dir))
+    for i in range(args.runs):
+        # the executor warms up once; later runs are already steady-state
+        rep = compiled.record(store=store, warmup=not args.no_warmup)
+        print(f"  run {i + 1}/{args.runs}: {rep.fidelity_summary()}")
+    records = store.load(compiled.key)
+    cal = compiled.recalibrate(store)
+    pre = fidelity_error(records)
+    post = cal.fidelity_error(records)
+    print(f"  {cal.summary()}" if args.verbose else
+          f"  calibrator {cal.version}: {len(cal.corrections)} corrections "
+          f"from {cal.n_records} records")
+    shrink = f" ({pre / post:.1f}x smaller)" if post > 0 else ""
+    print(f"  fidelity error {pre:.2f} -> {post:.2f} "
+          f"(sum |log wall/pred| over {cal.n_records} usable records)"
+          f"{shrink}")
+    if args.save_calibration:
+        path = cal.save(Path(args.save_calibration))
+        print(f"  wrote calibrator {path}")
+    recompiled, diff = compiled.replan(cal, store=store,
+                                       cache=args.cache_dir)
+    print(diff.summary())
+    from repro.runtime.cache import PlanCache
+    print(f"  new plan cached at "
+          f"{PlanCache(Path(args.cache_dir)).path_for(recompiled.provenance)}")
+    print(f"  measurements {store.path_for(compiled.key)} "
+          f"({len(records)} records)")
+    return 0
+
+
 def _cmd_bench(rest: Sequence[str]) -> int:
     # benchmarks/ lives at the repo root (it is not an installed package);
     # running from the checkout works directly, an installed interpreter
@@ -189,6 +234,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_exec.add_argument("--per-op", action="store_true",
                         help="print one line per executed unit")
 
+    p_cal = sub.add_parser(
+        "calibrate", help="record executions, fit a latency calibrator, "
+                          "replan with corrected predictors, and show the "
+                          "plan diff")
+    _add_compile_args(p_cal)
+    p_cal.add_argument("--runs", type=int, default=2,
+                       help="timed executions to record before fitting")
+    p_cal.add_argument("--store-dir", default="reports/measurements",
+                       help="measurement store directory (append-only "
+                            "JSONL per plan)")
+    p_cal.add_argument("--save-calibration", default=None,
+                       help="also write the fitted calibrator JSON here")
+    p_cal.add_argument("--no-warmup", action="store_true",
+                       help="skip the untimed warmup before the first "
+                            "recorded run")
+    p_cal.add_argument("--verbose", action="store_true",
+                       help="print per-(kind, mode) correction lines")
+
     # bench/serve exist here only so `python -m repro --help` lists them;
     # their real dispatch is the verbatim-forward intercept above
     sub.add_parser("bench",
@@ -201,6 +264,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
     if args.cmd == "plan":
         return _cmd_plan(args)
+    if args.cmd == "calibrate":
+        return _cmd_calibrate(args)
     return _cmd_execute(args)
 
 

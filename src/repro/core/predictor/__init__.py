@@ -1,5 +1,6 @@
 from repro.core.predictor.dataset import (eval_conv_ops, eval_linear_ops,
-                                          sample_conv_ops, sample_linear_ops)
+                                          sample_conv_ops, sample_linear_ops,
+                                          training_from_records)
 from repro.core.predictor.features import (blackbox_features, feature_names,
                                            kernel_of, whitebox_features)
 from repro.core.predictor.gbdt import GBDTParams, GBDTRegressor
@@ -8,6 +9,7 @@ from repro.core.predictor.train import (LatencyPredictor, mape, measure_ops,
 
 __all__ = [
     "eval_conv_ops", "eval_linear_ops", "sample_conv_ops", "sample_linear_ops",
+    "training_from_records",
     "blackbox_features", "feature_names", "kernel_of", "whitebox_features",
     "GBDTParams", "GBDTRegressor",
     "LatencyPredictor", "mape", "measure_ops", "train_predictor",

@@ -10,17 +10,52 @@ Evaluation sets reproduce Section 5.3 exactly:
              (2,039 operations in the paper; the same construction here);
   * conv:    the 4-stage hierarchy with per-stage resolutions/channels,
              K in {1,3,5,7}, S in {1,2}, FLOPs in [4e6, 1e9].
+
+`training_from_records` closes the measurement loop: any batch of
+`repro.measure.MeasurementRecord`s — executed plan runs or simulator
+sweeps — converts directly into a `(ops, y_us)` training set for
+`train_predictor(ops, ..., y_us=y)`, no glue code.
 """
 from __future__ import annotations
 
 import itertools
-from typing import List
+from typing import Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.types import ConvOp, LinearOp, Op
 
 FLOPS_MIN, FLOPS_MAX = 4e6, 1e9
+
+
+def training_from_records(records: Iterable, kind: Optional[str] = None
+                          ) -> Tuple[List[Op], np.ndarray]:
+    """(ops, measured µs) training pairs from measurement records.
+
+    Pool units (no op) and non-positive measurements are dropped, and so
+    are **co-executed** records: their wall time measures a channel-split
+    execution (max of two shards + gather) while `r.op` is the full op —
+    using them as-is would teach a per-backend predictor that the whole
+    op costs a half-op's time.  Only records whose full op ran unsplit
+    (`exclusive` executions, `simulated` measurements) are valid
+    per-backend training pairs.
+
+    Predictors are per op kind (`MuxPredictor` routes linear vs conv), so
+    a mixed executed run must be split before training: pass
+    `kind="linear"`/`"conv"` to select one kind's pairs.  The records are
+    duck-typed (`.op` / `.wall_us` / `.mode` / `.unit`), so this module
+    stays a leaf — it never imports `repro.measure`.
+    """
+    ops: List[Op] = []
+    y: List[float] = []
+    for r in records:
+        if r.op is None or r.wall_us <= 0.0 or r.mode == "coexec":
+            continue
+        if kind is not None and r.unit != kind:
+            continue
+        ops.append(r.op)
+        y.append(float(r.wall_us))
+    return ops, np.asarray(y)
 
 
 def _structured_dim(rng: np.random.Generator) -> int:

@@ -5,11 +5,16 @@ it adds reproducible log-normal measurement noise (thermal/scheduling jitter
 survives even the paper's cooling-fan protocol, Section 5.1) so that the
 trained predictors never see the analytic oracle exactly — the Table 1 MAPE
 numbers are only meaningful against noisy observations.
+
+`measure_records(...)` emits the same observations in the unified
+measurement schema (`repro.measure.MeasurementRecord`, wall = noisy
+measurement, pred = noise-free oracle), so simulator measurements, executed
+plan runs, and predictor training sets all flow through one record type.
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Sequence
+from typing import TYPE_CHECKING, List, Sequence
 
 import numpy as np
 
@@ -17,6 +22,9 @@ from repro.core.simulator.cpu_model import cpu_latency_us
 from repro.core.simulator.devices import DEVICES
 from repro.core.simulator.gpu_model import gpu_latency_us
 from repro.core.types import Op
+
+if TYPE_CHECKING:
+    from repro.measure.record import MeasurementRecord
 
 _NOISE_SIGMA = 0.030
 
@@ -45,6 +53,25 @@ def measure_latency_us(op: Op, device: str, backend: str,
                                           repeats=repeats, seed=seed)[0])
 
 
+def _measure_batch_with_base(ops: Sequence[Op], device: str, backend: str,
+                             repeats: int, seed: int
+                             ) -> "tuple[np.ndarray, np.ndarray]":
+    """(noisy medians, noise-free oracle) — the oracle is evaluated once
+    and shared by both outputs."""
+    base = np.array([true_latency_us(op, device, backend) for op in ops])
+    out = np.zeros(len(ops))
+    nz = np.nonzero(base)[0]
+    if nz.size == 0:
+        return out, base
+    noise = np.empty((nz.size, repeats))
+    for row, i in enumerate(nz):
+        rng = np.random.default_rng(_stable_seed(device, backend, ops[i],
+                                                 seed))
+        noise[row] = rng.normal(0.0, _NOISE_SIGMA, size=repeats)
+    out[nz] = np.median(base[nz, None] * np.exp(noise), axis=1)
+    return out, base
+
+
 def measure_latency_us_batch(ops: Sequence[Op], device: str, backend: str,
                              repeats: int = 5, seed: int = 0) -> np.ndarray:
     """Batched measurement: one call for a whole candidate grid.
@@ -54,16 +81,25 @@ def measure_latency_us_batch(ops: Sequence[Op], device: str, backend: str,
     alone or inside any batch observes the same jitter) while the noise
     application and median reduction are vectorized across the batch.
     """
+    return _measure_batch_with_base(list(ops), device, backend, repeats,
+                                    seed)[0]
+
+
+def measure_records(ops: Sequence[Op], device: str, backend: str,
+                    repeats: int = 5, seed: int = 0
+                    ) -> List["MeasurementRecord"]:
+    """Batched measurement in the unified schema: one `MeasurementRecord`
+    per op, `wall_us` = the noisy observation (bit-identical to
+    `measure_latency_us_batch`), `pred_us` = the noise-free oracle.
+
+    These records feed the same store/calibration/training pipeline as
+    executed plan runs (`core/predictor/dataset.training_from_records`).
+    """
+    from repro.measure.record import record_for_op
     ops = list(ops)
-    base = np.array([true_latency_us(op, device, backend) for op in ops])
-    out = np.zeros(len(ops))
-    nz = np.nonzero(base)[0]
-    if nz.size == 0:
-        return out
-    noise = np.empty((nz.size, repeats))
-    for row, i in enumerate(nz):
-        rng = np.random.default_rng(_stable_seed(device, backend, ops[i],
-                                                 seed))
-        noise[row] = rng.normal(0.0, _NOISE_SIGMA, size=repeats)
-    out[nz] = np.median(base[nz, None] * np.exp(noise), axis=1)
-    return out
+    walls, oracle = _measure_batch_with_base(ops, device, backend, repeats,
+                                             seed)
+    return [record_for_op(op, index=i, wall_us=float(walls[i]),
+                          pred_us=float(oracle[i]),
+                          device=device, backend=backend)
+            for i, op in enumerate(ops)]

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import math
-from typing import Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -46,6 +46,37 @@ def op_kind(op: Op) -> str:
     if isinstance(op, ConvOp):
         return "conv"
     raise TypeError(f"unregistered op type {type(op).__name__}")
+
+
+# ------------------------------------------------------------- op codecs
+
+def op_to_json(op: Op) -> Dict[str, Any]:
+    """JSON codec of an op, keyed by registry kind.  Lives here (not in
+    runtime/plan.py, which re-exports it) so every layer that serializes
+    ops — plan schedules, measurement records — shares one leaf encoding."""
+    if op_kind(op) == "linear":
+        return {"kind": "linear", "L": op.L, "C_in": op.C_in,
+                "C_out": op.C_out}
+    return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
+            "C_in": op.C_in, "C_out": op.C_out, "K": op.K, "S": op.S}
+
+
+def op_from_json(d: Dict[str, Any]) -> Op:
+    if d["kind"] == "linear":
+        return LinearOp(L=d["L"], C_in=d["C_in"], C_out=d["C_out"])
+    if d["kind"] == "conv":
+        return ConvOp(H_in=d["H_in"], W_in=d["W_in"], C_in=d["C_in"],
+                      C_out=d["C_out"], K=d["K"], S=d["S"])
+    raise ValueError(f"unknown op kind {d['kind']!r}")
+
+
+def op_label(op: Op) -> str:
+    """Human-readable label of an op — the one format shared by plan
+    explain tables, executor timings, and measurement records."""
+    if op_kind(op) == "linear":
+        return f"linear {op.L}x{op.C_in}->{op.C_out}"
+    return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
+            f"K{op.K} S{op.S}")
 
 
 # ------------------------------------------------------- shape contracts

@@ -1,0 +1,47 @@
+"""Measurement, calibration & adaptive replanning — the feedback loop.
+
+One schema (`MeasurementRecord`) for every timing the system produces:
+executed plan runs (`runtime/executor`), simulator measurements
+(`core/simulator/measure.measure_records`), and benchmark reports.  An
+append-only `MeasurementStore` (JSONL under `reports/measurements/`,
+keyed by the same provenance digests as the plan cache) accumulates them;
+a `Calibrator` fits per-(op-kind, mode) affine corrections and wraps any
+latency predictor without retraining (`CalibratedPredictor`); `replan`
+re-runs the cached planners under the corrections and diffs the plans
+(`PlanDiff`).  Facade spellings: `CompiledNetwork.record() /
+recalibrate() / replan()` and `python -m repro calibrate`.
+
+Exports resolve lazily (PEP 562), and nothing in this package imports
+jax — recording, fitting, and replanning are all host-side bookkeeping.
+"""
+import importlib
+
+_EXPORTS = {
+    "MEASUREMENT_SCHEMA_VERSION": "repro.measure.record",
+    "MeasurementRecord": "repro.measure.record",
+    "record_for_op": "repro.measure.record",
+    "usable_for_fidelity": "repro.measure.record",
+    "DEFAULT_STORE_DIR": "repro.measure.store",
+    "MeasurementStore": "repro.measure.store",
+    "AffineCorrection": "repro.measure.calibrate",
+    "CalibratedPredictor": "repro.measure.calibrate",
+    "Calibrator": "repro.measure.calibrate",
+    "fidelity_error": "repro.measure.calibrate",
+    "DecisionChange": "repro.measure.replan",
+    "PlanDiff": "repro.measure.replan",
+    "diff_plans": "repro.measure.replan",
+    "replan": "repro.measure.replan",
+    "score_decisions": "repro.measure.replan",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

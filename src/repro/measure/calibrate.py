@@ -1,0 +1,245 @@
+"""Predictor calibration from accumulated measurement records.
+
+The planner's latency predictors model a *phone*; execution happens on
+whatever host runs the plan.  The two are related but offset — the paper's
+companion work (*Inference Latency Prediction at the Edge*) closes exactly
+this gap with measured-on-device feedback.  A `Calibrator` is that
+feedback loop: it fits per-(op-kind, mode) **affine corrections in log
+space**
+
+    log(wall_us)  ≈  a * log(pred_us) + b
+
+from the records a `MeasurementStore` accumulated, and applies them to any
+latency predictor **without retraining** (`wrap` returns a
+`CalibratedPredictor` with the same `predict` contract).
+
+Fitting is deliberately conservative: per group it scores three candidate
+corrections — identity (a=1, b=0), pure log-shift (a=1, b=median of the
+log-residuals, the exact L1 minimizer for a shift model), and an affine
+least-squares fit (only with ≥3 spread-out points) — and keeps whichever
+minimizes the summed |log wall - log cal| on the fitted records.  Because
+identity is always a candidate, calibration can never *increase* the
+fidelity error on the records it was fit from.
+
+A calibrator is JSON-persistable (`save`/`load`) and content-addressed:
+`version` digests the fitted coefficients, and the cached planners fold it
+into plan provenance (`PlanProvenance.calibration`), so a refit calibrator
+invalidates dependent plans instead of aliasing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.types import Op
+from repro.kernels.registry import op_kind
+from repro.measure.record import MeasurementRecord, usable_for_fidelity
+
+CALIBRATION_SCHEMA_VERSION = 1
+
+#: aggregate pseudo-mode: the per-kind fit over records of every mode
+#: (what `CalibratedPredictor` applies when the mode is unknown at
+#: predict time, i.e. during planning)
+MODE_ANY = "*"
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineCorrection:
+    """log(cal_us) = a * log(pred_us) + b, fit on n records."""
+
+    a: float
+    b: float
+    n: int
+
+    def apply_us(self, pred_us: np.ndarray) -> np.ndarray:
+        p = np.asarray(pred_us, dtype=float)
+        safe = np.maximum(p, 1e-9)
+        out = np.exp(self.a * np.log(safe) + self.b)
+        # zero predictions stay zero: the partitioner's zero-channel
+        # candidates and pool units carry no latency to correct
+        return np.where(p > 0.0, out, 0.0)
+
+
+def _fit_group(logp: np.ndarray, logw: np.ndarray) -> AffineCorrection:
+    """Best of {identity, L1-optimal shift, least-squares affine} by summed
+    absolute log-residual — never worse than no correction."""
+    cands = [(1.0, 0.0), (1.0, float(np.median(logw - logp)))]
+    if len(logp) >= 3 and float(np.ptp(logp)) > 1e-9:
+        A = np.vstack([logp, np.ones_like(logp)]).T
+        coef, *_ = np.linalg.lstsq(A, logw, rcond=None)
+        cands.append((float(coef[0]), float(coef[1])))
+    a, b = min(cands,
+               key=lambda ab: float(np.sum(np.abs(logw - (ab[0] * logp
+                                                          + ab[1])))))
+    return AffineCorrection(a=a, b=b, n=len(logp))
+
+
+def fidelity_error(records: Iterable[MeasurementRecord],
+                   calibrator: Optional["Calibrator"] = None) -> float:
+    """Σ |log(wall/pred)| over usable records — the executed-vs-predicted
+    fidelity error the acceptance metric tracks.  With a calibrator, the
+    predictions are corrected first."""
+    err = 0.0
+    for r in records:
+        if not usable_for_fidelity(r):
+            continue
+        pred = r.pred_us
+        if calibrator is not None:
+            pred = float(calibrator.correct_us(r.unit, r.mode, pred))
+        if pred <= 0.0:
+            continue
+        err += abs(float(np.log(r.wall_us / pred)))
+    return err
+
+
+class Calibrator:
+    """Per-(op-kind, mode) affine latency corrections, fit from records."""
+
+    def __init__(self,
+                 corrections: Dict[Tuple[str, str], AffineCorrection],
+                 n_records: int = 0):
+        self.corrections = dict(corrections)
+        self.n_records = n_records
+
+    # ----------------------------------------------------------- fitting
+    @staticmethod
+    def fit(records: Iterable[MeasurementRecord]) -> "Calibrator":
+        """Fit per-(kind, mode) corrections plus a per-kind aggregate
+        (mode `*`) from every usable record.
+
+        The aggregate is what `CalibratedPredictor` applies to *per-
+        backend* predictions at planning time, so it is fit only on
+        records whose (pred, wall) pair describes an unsplit full-op
+        execution (`exclusive`, `simulated`).  Co-executed records are
+        unit totals — max-of-shards + sync overhead + deferred gather —
+        and pairing them with per-shard predictions would encode that
+        overhead into every candidate split; they still get their own
+        (kind, "coexec") correction for fidelity accounting.
+        """
+        groups: Dict[Tuple[str, str], list] = {}
+        usable = 0
+        for r in records:
+            if not usable_for_fidelity(r):
+                continue
+            usable += 1
+            pair = (float(np.log(r.pred_us)), float(np.log(r.wall_us)))
+            groups.setdefault((r.unit, r.mode), []).append(pair)
+            if r.mode != "coexec":
+                groups.setdefault((r.unit, MODE_ANY), []).append(pair)
+        if usable == 0:
+            raise ValueError("cannot fit a Calibrator from zero usable "
+                             "records (need wall_us > 0 and pred_us > 0)")
+        corrections = {}
+        for key, pairs in groups.items():
+            arr = np.asarray(pairs, dtype=float)
+            corrections[key] = _fit_group(arr[:, 0], arr[:, 1])
+        return Calibrator(corrections, n_records=usable)
+
+    # ---------------------------------------------------------- applying
+    def correction_for(self, kind: str, mode: str
+                       ) -> Optional[AffineCorrection]:
+        """The (kind, mode) correction, falling back to the per-kind
+        aggregate; None when the kind was never measured."""
+        return (self.corrections.get((kind, mode))
+                or self.corrections.get((kind, MODE_ANY)))
+
+    def correct_us(self, kind: str, mode: str, pred_us) -> np.ndarray:
+        corr = self.correction_for(kind, mode)
+        if corr is None:
+            return np.asarray(pred_us, dtype=float)
+        return corr.apply_us(pred_us)
+
+    def fidelity_error(self, records: Iterable[MeasurementRecord]) -> float:
+        """Calibrated fidelity error of `records` (see `fidelity_error`)."""
+        return fidelity_error(records, self)
+
+    def wrap(self, predictor) -> "CalibratedPredictor":
+        """Wrap any latency predictor (LatencyPredictor or MuxPredictor)
+        with these corrections — no retraining.  Wrapping an already
+        calibrated predictor re-wraps the inner one (corrections never
+        stack)."""
+        if isinstance(predictor, CalibratedPredictor):
+            predictor = predictor.inner
+        return CalibratedPredictor(inner=predictor, calibration=self)
+
+    # ------------------------------------------------------------ codecs
+    @property
+    def version(self) -> str:
+        """Content digest of the fitted coefficients — what plan-cache
+        provenance records (`PlanProvenance.calibration`)."""
+        blob = json.dumps(self.to_json(), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.blake2b(blob.encode(), digest_size=12).hexdigest()
+
+    def to_json(self) -> Dict[str, object]:
+        return {"schema_version": CALIBRATION_SCHEMA_VERSION,
+                "n_records": self.n_records,
+                "corrections": [
+                    {"unit": k[0], "mode": k[1], "a": c.a, "b": c.b,
+                     "n": c.n}
+                    for k, c in sorted(self.corrections.items())]}
+
+    @staticmethod
+    def from_json(d: Dict[str, object]) -> "Calibrator":
+        if d.get("schema_version") != CALIBRATION_SCHEMA_VERSION:
+            raise ValueError(f"unsupported calibration schema "
+                             f"{d.get('schema_version')!r}")
+        corrections = {
+            (e["unit"], e["mode"]): AffineCorrection(a=e["a"], b=e["b"],
+                                                     n=e["n"])
+            for e in d["corrections"]}
+        return Calibrator(corrections, n_records=int(d.get("n_records", 0)))
+
+    def save(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1))
+        return path
+
+    @staticmethod
+    def load(path: Union[str, Path]) -> "Calibrator":
+        return Calibrator.from_json(json.loads(Path(path).read_text()))
+
+    def summary(self) -> str:
+        lines = [f"calibrator {self.version}: "
+                 f"{len(self.corrections)} corrections from "
+                 f"{self.n_records} records"]
+        for (kind, mode), c in sorted(self.corrections.items()):
+            lines.append(f"  {kind}/{mode}: log_wall ~= {c.a:.3f}*log_pred "
+                         f"{c.b:+.3f}  (n={c.n})")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class CalibratedPredictor:
+    """A latency predictor with measured-on-host corrections applied.
+
+    Same `predict`/`device` contract as the wrapped predictor, so it drops
+    into the batched planners unchanged; `runtime.plan.predictor_checksum`
+    unwraps it (the calibration invalidates plans via the provenance
+    `calibration` field instead).
+    """
+
+    inner: object                 # LatencyPredictor | MuxPredictor
+    calibration: Calibrator
+
+    @property
+    def device(self) -> str:
+        return self.inner.device
+
+    def predict(self, ops: Sequence[Op]) -> np.ndarray:
+        ops = list(ops)
+        out = np.asarray(self.inner.predict(ops), dtype=float).copy()
+        kinds = np.array([op_kind(op) for op in ops])
+        for kind in np.unique(kinds):
+            sel = kinds == kind
+            # the mode is unknown at predict time (planning scores every
+            # candidate split); apply the per-kind aggregate fit
+            out[sel] = self.calibration.correct_us(str(kind), MODE_ANY,
+                                                   out[sel])
+        return out

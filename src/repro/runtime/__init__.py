@@ -27,6 +27,7 @@ _EXPORTS = {
     "CoexecPlan": "repro.runtime.plan",
     "ExecSpec": "repro.runtime.plan",
     "PlanProvenance": "repro.runtime.plan",
+    "calibration_version": "repro.runtime.plan",
     "decision_from_json": "repro.runtime.plan",
     "decision_to_json": "repro.runtime.plan",
     "decision_to_spec": "repro.runtime.plan",

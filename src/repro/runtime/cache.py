@@ -19,10 +19,10 @@ from repro.core.partitioner import (PartitionDecision,
 from repro.core.planner import plan_network
 from repro.core.sync import SyncMechanism
 from repro.core.types import Op
-from repro.runtime.plan import (PLANNER_GRID, PLANNER_PREDICTOR, CoexecPlan,
-                                PlanProvenance, build_schedule,
-                                network_fingerprint, plan_from_report,
-                                predictor_checksum)
+from repro.runtime.plan import (PLANNER_GRID, PLANNER_PREDICTOR,
+                                CoexecPlan, PlanProvenance, build_schedule,
+                                calibration_version, network_fingerprint,
+                                plan_from_report, predictor_checksum)
 
 
 class PlanCache:
@@ -74,14 +74,17 @@ def plan_network_cached(units: Sequence[Unit], cpu_pred, gpu_pred, *,
 
     Provenance (and therefore the cache key) covers the network graph, the
     target (device, threads), the sync mechanism, the candidate-grid step,
-    the measurement seed, and a structural checksum of both predictors.
+    the measurement seed, a structural checksum of both predictors, and —
+    when the predictors are calibrated (`repro.measure.Calibrator.wrap`) —
+    the calibration version, so refit calibrators never alias stale plans.
     """
     prov = PlanProvenance(
         device=gpu_pred.device, threads=threads, mechanism=mechanism.value,
         step=step, seed=seed,
         network_fingerprint=network_fingerprint(units),
         predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
-        planner=PLANNER_PREDICTOR)
+        planner=PLANNER_PREDICTOR,
+        calibration=calibration_version(cpu_pred, gpu_pred))
     hit = cache.get(prov)
     if hit is not None:
         return hit
@@ -89,7 +92,8 @@ def plan_network_cached(units: Sequence[Unit], cpu_pred, gpu_pred, *,
                           mechanism=mechanism, step=step, seed=seed)
     plan = plan_from_report(units, report, mechanism=mechanism, step=step,
                             seed=seed,
-                            pred_checksum=prov.predictor_checksum)
+                            pred_checksum=prov.predictor_checksum,
+                            calibration=prov.calibration)
     cache.put(plan)
     return plan
 
@@ -118,7 +122,8 @@ def partition_ops_plan_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
         device=gpu_pred.device, threads=0, mechanism=mechanism.value,
         step=step, seed=0, network_fingerprint=network_fingerprint(units),
         predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
-        planner=PLANNER_PREDICTOR)
+        planner=PLANNER_PREDICTOR,
+        calibration=calibration_version(cpu_pred, gpu_pred))
     hit = cache.get(prov)
     if hit is not None:
         return hit

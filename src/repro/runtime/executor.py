@@ -30,15 +30,19 @@ re-materializes the declared shape deterministically (tile + crop), and the
 unsplit oracle (`run_oracle`) applies the identical adaptation — so
 executed plans are testable against the oracle end to end.
 
-Every unit execution is timed; the resulting `ExecutionReport` pairs
-executed wall time with the plan's predicted latency per op (the fidelity
-summary that future online replanning will consume).  Note the predictions
-model a *phone*, the execution runs on *this host* — the report tracks the
-ratio's stability across ops, not its absolute value.
+Every unit execution is timed into a `repro.measure.MeasurementRecord` —
+the one schema shared with the simulator and the predictor training sets —
+and the resulting `ExecutionReport` pairs executed wall time with the
+plan's predicted latency per op (what `MeasurementStore`/`Calibrator`
+consume for online replanning).  Note the predictions model a *phone*, the
+execution runs on *this host* — the report tracks the ratio's stability
+across ops, not its absolute value.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import platform
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -51,40 +55,27 @@ from repro.core.coexec import (SplitPlan, coexec_conv2d, coexec_matmul,
                                pack_weights, split_for_mesh)
 from repro.core.networks import Unit, pool_out_edge, unit_input_shape
 from repro.kernels import registry
+from repro.measure.record import (SOURCE_EXECUTOR, MeasurementRecord,
+                                  usable_for_fidelity)
 from repro.runtime.plan import (CoexecPlan, ExecSpec, network_fingerprint,
                                 spec_label)
 
-
 # -------------------------------------------------------------- reporting
 
-@dataclasses.dataclass
-class OpTiming:
-    """Executed-vs-predicted record for one schedule unit."""
-
-    index: int
-    unit: str                    # "conv" | "linear" | "pool"
-    label: str
-    mode: str                    # "coexec" | "exclusive" | "pool"
-    c_fast: int
-    c_slow: int
-    chained_input: bool          # consumed the producer's group-local stack
-    gathered_output: bool        # output materialized (reshard point)
-    wall_us: float
-    pred_us: float
-
-    def to_json(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+#: deprecated alias — the executor's one-off timing format was unified
+#: into the shared measurement schema (see docs/MIGRATION.md)
+OpTiming = MeasurementRecord
 
 
 @dataclasses.dataclass
 class ExecutionReport:
-    """Per-op execution timings + reshard accounting for one plan run."""
+    """Per-op measurement records + reshard accounting for one plan run."""
 
     device: str                  # the plan's (simulated) target device
     network_fingerprint: str
     chain: bool
     split_capable: bool
-    timings: List[OpTiming]
+    timings: List[MeasurementRecord]
     reshard_points: int
     elided: int
 
@@ -98,6 +89,23 @@ class ExecutionReport:
 
     def count(self, mode: str) -> int:
         return sum(1 for t in self.timings if t.mode == mode)
+
+    def fidelity_error(self) -> float:
+        """Σ |log(wall/pred)| over usable units — delegates to the one
+        metric implementation (`repro.measure.fidelity_error`), so the
+        executor's number can never drift from what the CLI, benchmarks,
+        and Calibrator report."""
+        from repro.measure.calibrate import fidelity_error
+        return fidelity_error(self.timings)
+
+    def mean_log_ratio(self) -> Optional[float]:
+        """Mean signed log(wall/pred) — the drift signal `ServingEngine`
+        tracks across runs (None when nothing is comparable)."""
+        ratios = [math.log(t.wall_us / t.pred_us) for t in self.timings
+                  if usable_for_fidelity(t)]
+        if not ratios:
+            return None
+        return sum(ratios) / len(ratios)
 
     def fidelity_summary(self) -> str:
         n = len(self.timings)
@@ -129,6 +137,15 @@ class ExecutionReport:
                 "wall_us": self.wall_us,
                 "predicted_us": self.predicted_us,
                 "timings": [t.to_json() for t in self.timings]}
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "ExecutionReport":
+        return ExecutionReport(
+            device=d["device"],
+            network_fingerprint=d["network_fingerprint"],
+            chain=d["chain"], split_capable=d["split_capable"],
+            timings=[MeasurementRecord.from_json(t) for t in d["timings"]],
+            reshard_points=d["reshard_points"], elided=d["elided"])
 
 
 # ------------------------------------------------------------- activations
@@ -190,6 +207,7 @@ class PlanExecutor:
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.last_report: Optional[ExecutionReport] = None
+        self._warmed: set = set()      # chain flags already executed once
 
         rng = np.random.default_rng(seed)
         self.params: List[Optional[jax.Array]] = []
@@ -289,15 +307,34 @@ class PlanExecutor:
         reported per-op wall times measure steady-state execution rather
         than shard_map tracing + XLA compilation (first-touch compile can
         dominate the microsecond-scale predictions by orders of
-        magnitude).  The CLIs and `tab3 --execute` warm up by default;
-        equivalence tests skip it for speed.
+        magnitude).  The executor tracks what it has already executed
+        (per chain flag), so `warmup=True` is a no-op after the first
+        run — callers can pass it unconditionally without paying 2N
+        schedule passes for N recorded runs.  The warmup pass never
+        publishes its report: only the timed run lands on
+        `self.last_report` (a warmup report leaking there would poison
+        the measurement store and any calibration fit from it).  The
+        CLIs and `tab3 --execute` warm up by default; equivalence tests
+        skip it for speed.
         """
-        if warmup:
-            self.run(x, chain=chain, warmup=False)
+        if warmup and chain not in self._warmed:
+            self._execute(x, chain=chain)        # untimed: not published
+            self._warmed.add(chain)
+        y, report = self._execute(x, chain=chain)
+        self._warmed.add(chain)
+        self.last_report = report
+        return y, report
+
+    __call__ = run
+
+    def _execute(self, x: Optional[jax.Array] = None, *, chain: bool = True
+                 ) -> Tuple[jax.Array, ExecutionReport]:
         act: _Act = (self.input_template() if x is None
                      else jnp.asarray(x, self.dtype))
-        timings: List[OpTiming] = []
+        timings: List[MeasurementRecord] = []
         reshard = elided = 0
+        host = platform.node()
+        prov = self.plan.provenance
         for i, (spec, w) in enumerate(zip(self.specs, self.params)):
             t0 = time.perf_counter()
             chained = False
@@ -345,13 +382,16 @@ class PlanExecutor:
                     act = self._dense(x_in, w, spec)
             jax.block_until_ready(act.data if isinstance(act, _Stacked)
                                   else act)
-            timings.append(OpTiming(
+            timings.append(MeasurementRecord(
                 index=i, unit=spec.unit, label=spec_label(spec), mode=mode,
                 c_fast=spec.c_fast, c_slow=spec.c_slow,
                 chained_input=chained,
                 gathered_output=not isinstance(act, _Stacked),
                 wall_us=(time.perf_counter() - t0) * 1e6,
-                pred_us=spec.pred_total_us))
+                pred_us=spec.pred_total_us,
+                op=spec.op, source=SOURCE_EXECUTOR, device=prov.device,
+                host=host, plan_key=self.plan.key,
+                network_fingerprint=prov.network_fingerprint))
 
         # the terminal sync point: with chaining, the last co-executed op's
         # gather is deferred to here — time it and charge it to that op so
@@ -364,14 +404,11 @@ class PlanExecutor:
             timings[-1].gathered_output = True
             timings[-1].wall_us += (time.perf_counter() - t0) * 1e6
         report = ExecutionReport(
-            device=self.plan.provenance.device,
-            network_fingerprint=self.plan.provenance.network_fingerprint,
+            device=prov.device,
+            network_fingerprint=prov.network_fingerprint,
             chain=chain, split_capable=self.split_capable, timings=timings,
             reshard_points=reshard, elided=elided)
-        self.last_report = report
         return y, report
-
-    __call__ = run
 
     def run_oracle(self, x: Optional[jax.Array] = None) -> jax.Array:
         """The unsplit reference: every unit dense, identical params and

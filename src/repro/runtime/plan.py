@@ -27,33 +27,15 @@ from repro.core.networks import Unit
 from repro.core.partitioner import PartitionDecision
 from repro.core.planner import PlanReport
 from repro.core.sync import SyncMechanism
-from repro.core.types import ConvOp, LinearOp, Op
-from repro.kernels.registry import op_kind
+from repro.core.types import Op
+from repro.kernels.registry import (op_from_json, op_kind,  # noqa: F401 —
+                                    op_label, op_to_json)   # re-exported
 
 PLAN_SCHEMA_VERSION = 1
 
 #: planner identifiers recorded in provenance
 PLANNER_PREDICTOR = "predictor"      # GBDT-driven (deployable path)
 PLANNER_GRID = "grid"                # measurement-driven oracle
-
-
-# --------------------------------------------------------------- op codecs
-
-def op_to_json(op: Op) -> Dict[str, Any]:
-    if op_kind(op) == "linear":
-        return {"kind": "linear", "L": op.L, "C_in": op.C_in,
-                "C_out": op.C_out}
-    return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
-            "C_in": op.C_in, "C_out": op.C_out, "K": op.K, "S": op.S}
-
-
-def op_from_json(d: Dict[str, Any]) -> Op:
-    if d["kind"] == "linear":
-        return LinearOp(L=d["L"], C_in=d["C_in"], C_out=d["C_out"])
-    if d["kind"] == "conv":
-        return ConvOp(H_in=d["H_in"], W_in=d["W_in"], C_in=d["C_in"],
-                      C_out=d["C_out"], K=d["K"], S=d["S"])
-    raise ValueError(f"unknown op kind {d['kind']!r}")
 
 
 def decision_to_json(dec: PartitionDecision) -> Dict[str, Any]:
@@ -112,6 +94,11 @@ def predictor_checksum(*predictors) -> str:
     """
     h = hashlib.blake2b(digest_size=12)
     for p in predictors:
+        # CalibratedPredictor is checksum-transparent: structurally it IS
+        # the wrapped predictor — the calibration invalidates plans through
+        # the provenance `calibration` field, not the predictor checksum
+        while hasattr(p, "inner") and hasattr(p, "calibration"):
+            p = p.inner
         if hasattr(p, "models"):                     # LatencyPredictor
             h.update(f"{p.device}/{p.backend}/{p.whitebox}".encode())
             for kern in sorted(p.models):
@@ -122,6 +109,15 @@ def predictor_checksum(*predictors) -> str:
         else:
             raise TypeError(f"cannot checksum predictor {type(p).__name__}")
     return h.hexdigest()
+
+
+def calibration_version(*predictors) -> str:
+    """The calibration digest a set of predictors carries ("" when none is
+    calibrated).  Folded into `PlanProvenance.calibration` by the cached
+    planners so a refit calibrator invalidates dependent plans."""
+    versions = sorted({p.calibration.version for p in predictors
+                       if getattr(p, "calibration", None) is not None})
+    return "+".join(versions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,15 +139,25 @@ class PlanProvenance:
     predictor_checksum: str
     planner: str = PLANNER_PREDICTOR
     schema_version: int = PLAN_SCHEMA_VERSION
+    calibration: str = ""         # Calibrator version ("" = uncalibrated)
+
+    def _canonical(self) -> Dict[str, Any]:
+        # the calibration field is omitted when empty so uncalibrated keys
+        # (and stored plan JSON) stay bit-identical to the pre-calibration
+        # format — existing on-disk caches remain warm
+        d = dataclasses.asdict(self)
+        if not d.get("calibration"):
+            d.pop("calibration", None)
+        return d
 
     @property
     def key(self) -> str:
-        blob = json.dumps(dataclasses.asdict(self), sort_keys=True,
+        blob = json.dumps(self._canonical(), sort_keys=True,
                           separators=(",", ":"))
         return hashlib.blake2b(blob.encode(), digest_size=16).hexdigest()
 
     def to_json(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        return self._canonical()
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "PlanProvenance":
@@ -198,15 +204,11 @@ def decision_to_spec(dec: PartitionDecision) -> ExecSpec:
 
 def spec_label(spec: ExecSpec) -> str:
     """Human-readable label of one spec — the one format shared by the
-    executor's per-op timings and `CompiledNetwork.explain()` (lives here,
-    not in executor.py, so label rendering stays jax-free)."""
+    executor's measurement records and `CompiledNetwork.explain()` (op
+    rendering delegates to the kernel registry's `op_label`)."""
     if spec.unit == "pool":
         return f"pool {spec.pool_bytes}B"
-    op = spec.op
-    if spec.unit == "linear":
-        return f"linear {op.L}x{op.C_in}->{op.C_out}"
-    return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
-            f"K{op.K} S{op.S}")
+    return op_label(spec.op)
 
 
 # ------------------------------------------------------------------- plan
@@ -320,12 +322,13 @@ def build_schedule(units: Sequence[Unit],
 
 def plan_from_report(units: Sequence[Unit], report: PlanReport, *,
                      mechanism: SyncMechanism, step: int, seed: int,
-                     pred_checksum: str) -> CoexecPlan:
+                     pred_checksum: str, calibration: str = "") -> CoexecPlan:
     prov = PlanProvenance(device=report.device, threads=report.threads,
                           mechanism=mechanism.value, step=step, seed=seed,
                           network_fingerprint=network_fingerprint(units),
                           predictor_checksum=pred_checksum,
-                          planner=PLANNER_PREDICTOR)
+                          planner=PLANNER_PREDICTOR,
+                          calibration=calibration)
     return CoexecPlan(provenance=prov,
                       schedule=build_schedule(units, report.decisions),
                       baseline_us=report.baseline_us,

@@ -16,6 +16,13 @@ units alike) through `PlanExecutor` onto the co-execution mesh, keeping
 the per-op fidelity report on `engine.last_execution_report` for ops
 teams to compare executed against planned latency.  With `compiled=` the
 engine shares the compiled network's memoized executor.
+
+With `measurement_store=` (a `repro.measure.MeasurementStore` or a
+directory path), every `execute_plan` call auto-appends its per-op
+`MeasurementRecord`s to the store — the serving fleet becomes the
+calibration data source — and `engine.drift` exposes how far the
+executed-vs-predicted log-ratio has moved since the first recorded run
+(the replanning trigger an ops team would alert on).
 """
 from __future__ import annotations
 
@@ -52,7 +59,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, model, params, *,
                  max_batch: int = 4, max_len: int = 128, seed: int = 0,
                  coexec_plan: Optional["CoexecPlan"] = None,
-                 compiled=None):
+                 compiled=None, measurement_store=None):
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -74,6 +81,12 @@ class ServingEngine:
                             f"(got {type(coexec_plan).__name__})")
         self.compiled = compiled
         self.coexec_plan = coexec_plan
+        if measurement_store is not None and \
+                not hasattr(measurement_store, "append"):
+            from repro.measure import MeasurementStore
+            measurement_store = MeasurementStore(measurement_store)
+        self.measurement_store = measurement_store
+        self._fidelity_log: List[float] = []   # mean log(wall/pred) per run
         self._plan_executor: Optional["PlanExecutor"] = None
         self.last_execution_report: Optional["ExecutionReport"] = None
         self._prefill = jax.jit(model.prefill)
@@ -96,24 +109,57 @@ class ServingEngine:
         return self._plan_executor
 
     def execute_plan(self, x: Optional[jax.Array] = None, *,
-                     chain: bool = True) -> Tuple[jax.Array, Any]:
+                     chain: bool = True,
+                     warmup: bool = True) -> Tuple[jax.Array, Any]:
         """Execute the shipped plan on the co-execution mesh.
 
         Runs every scheduled unit — co-executed projection (linear) and
         conv layers channel-split across the device groups, exclusive ones
         unsplit — and records the executed-vs-predicted fidelity report on
-        `self.last_execution_report`.  Returns (output, report).
+        `self.last_execution_report` (and, when the engine has a
+        `measurement_store`, appends the per-op records to it).  Returns
+        (output, report).
+
+        `warmup=True` (default) costs one untimed pass before the
+        executor's *first* run only (the executor tracks what it already
+        executed), so the recorded wall times — the calibration data
+        source and the `drift` anchor — measure steady-state execution,
+        never tracing + XLA compilation.
         """
-        y, report = self.plan_executor.run(x, chain=chain)
+        y, report = self.plan_executor.run(x, chain=chain, warmup=warmup)
         self.last_execution_report = report
+        ratio = report.mean_log_ratio()
+        if ratio is not None:
+            self._fidelity_log.append(ratio)
+        if self.measurement_store is not None:
+            self.measurement_store.append(report)
         return y, report
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    @property
+    def drift(self) -> Optional[float]:
+        """Fidelity drift of the shipped plan: latest mean log(wall/pred)
+        minus the first recorded run's (0.0 = stable, positive = the plan
+        got slower than planned — the replanning trigger).  None until two
+        executions have been observed."""
+        if len(self._fidelity_log) < 2:
+            return None
+        return self._fidelity_log[-1] - self._fidelity_log[0]
+
+    def _sample(self, logits: jax.Array, temperatures) -> jax.Array:
+        """Per-request sampling: row i of `logits` samples at
+        `temperatures[i]` (<= 0 = greedy), so mixed greedy/temperature
+        batches are correct.  All-greedy batches never consume rng."""
+        temps = jnp.asarray(temperatures, jnp.float32)
+        if temps.ndim == 0:
+            temps = jnp.full((logits.shape[0],), temps)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not bool(jnp.any(temps > 0.0)):
+            return greedy
         self.rng, sub = jax.random.split(self.rng)
-        return jax.random.categorical(sub, logits / temperature,
-                                      axis=-1).astype(jnp.int32)
+        safe = jnp.where(temps > 0.0, temps, 1.0)
+        sampled = jax.random.categorical(
+            sub, logits / safe[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0.0, sampled, greedy)
 
     def run(self, requests: List[Request]) -> List[Completion]:
         out: List[Completion] = []
@@ -141,16 +187,18 @@ class ServingEngine:
             logits, cache = self._prefill(self.params, toks, cache)
 
         max_new = max(r.max_new_tokens for r in batch)
-        temperature = batch[0].temperature
+        # per-request temperatures: a greedy request stays greedy even when
+        # batched behind a temperature-sampling one (batch[0] used to win)
+        temps = np.array([r.temperature for r in batch], np.float32)
         generated = [[] for _ in range(b)]
-        tok = self._sample(logits, temperature)
+        tok = self._sample(logits, temps)
         for i in range(b):
             generated[i].append(int(tok[i]))
         for step in range(1, max_new):
             pos = jnp.int32(t + step - 1)
             logits, cache = self._decode(self.params, tok[:, None], cache,
                                          pos)
-            tok = self._sample(logits, temperature)
+            tok = self._sample(logits, temps)
             for i in range(b):
                 if len(generated[i]) < batch[i].max_new_tokens:
                     generated[i].append(int(tok[i]))

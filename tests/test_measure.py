@@ -1,0 +1,469 @@
+"""Tests for the measurement/calibration/replanning subsystem
+(repro.measure) and its integrations: the executor's unified records, the
+on-disk store, calibrator fitting + persistence, calibrated replanning
+through the plan cache, and the serving engine's auto-record/drift hooks.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.predictor import (sample_conv_ops, sample_linear_ops,
+                                  train_predictor, training_from_records)
+from repro.core.predictor.gbdt import GBDTParams
+from repro.core.predictor.train import MuxPredictor
+from repro.core.simulator.measure import (measure_latency_us_batch,
+                                          measure_records)
+from repro.core.types import ConvOp, LinearOp
+from repro.measure import (Calibrator, CalibratedPredictor,
+                           MeasurementRecord, MeasurementStore,
+                           fidelity_error, record_for_op)
+from repro.runtime import (PlanCache, PlanExecutor, calibration_version,
+                           plan_network_cached, predictor_checksum)
+from repro.runtime.executor import ExecutionReport, OpTiming
+from repro.runtime.plan import PlanProvenance
+
+_FAST = GBDTParams(n_estimators=40, max_depth=6, learning_rate=0.2)
+
+
+@pytest.fixture(scope="module")
+def mux_predictors():
+    lt = sample_linear_ops(250, seed=1)
+    ct = sample_conv_ops(250, seed=1)
+    dev = "moto2022"
+    gp = MuxPredictor(
+        train_predictor(lt, dev, "gpu", whitebox=True, params=_FAST),
+        train_predictor(ct, dev, "gpu", whitebox=True, params=_FAST))
+    cp = MuxPredictor(
+        train_predictor(lt, dev, "cpu3", whitebox=False, params=_FAST),
+        train_predictor(ct, dev, "cpu3", whitebox=False, params=_FAST))
+    return cp, gp
+
+
+def _small_units():
+    return [("conv", ConvOp(28, 28, 32, 64, 3, 1)),
+            ("conv", ConvOp(28, 28, 64, 64, 3, 2)),
+            ("pool", 4 * 7 * 7 * 64),
+            ("conv", ConvOp(7, 7, 64, 96, 3, 1)),
+            ("pool", 4 * 96),
+            ("linear", LinearOp(1, 96, 128))]
+
+
+def _plan(units, mux_predictors, cache_dir):
+    cp, gp = mux_predictors
+    return plan_network_cached(units, cp, gp, threads=3,
+                               cache=PlanCache(cache_dir))
+
+
+# ---------------------------------------------------------- record schema
+
+def test_measurement_record_json_roundtrip_bitstable():
+    recs = [
+        record_for_op(LinearOp(4, 32, 64), index=3, wall_us=12.5,
+                      pred_us=3.25, device="moto2022", backend="gpu"),
+        record_for_op(ConvOp(28, 28, 32, 64, 3, 2), wall_us=1234.0625,
+                      pred_us=980.5, device="pixel5", backend="cpu3",
+                      host="ci", plan_key="abc",
+                      network_fingerprint="def"),
+        MeasurementRecord(index=2, unit="pool", label="pool 64B",
+                          mode="pool", c_fast=0, c_slow=0,
+                          chained_input=False, gathered_output=True,
+                          wall_us=7.03125, pred_us=0.0),
+    ]
+    for r in recs:
+        doc = r.to_json()
+        back = MeasurementRecord.from_json(json.loads(json.dumps(doc)))
+        assert back == r                       # dataclass equality, op incl.
+        assert back.to_json() == doc           # bit-stable re-encode
+
+
+def test_record_features_route_through_registry():
+    from repro.kernels import registry
+    op = ConvOp(8, 8, 16, 24, 3, 2)
+    r = record_for_op(op, wall_us=1.0, pred_us=1.0)
+    assert r.features() == registry.get("conv").base_features(op)
+    assert r.unit == "conv" and r.label == registry.op_label(op)
+    pool = MeasurementRecord(index=0, unit="pool", label="pool", mode="pool",
+                             c_fast=0, c_slow=0, chained_input=False,
+                             gathered_output=True, wall_us=1.0, pred_us=0.0)
+    assert pool.features() is None
+
+
+def test_optiming_is_the_measurement_record():
+    """The executor's one-off OpTiming format was unified into the shared
+    schema; the alias (and its 10-field constructor) keeps working."""
+    assert OpTiming is MeasurementRecord
+    t = OpTiming(index=0, unit="linear", label="l", mode="exclusive",
+                 c_fast=8, c_slow=0, chained_input=False,
+                 gathered_output=True, wall_us=2.0, pred_us=1.0)
+    assert t.op is None and t.source == "executor"
+
+
+def test_execution_report_json_roundtrip(mux_predictors, tmp_path):
+    plan = _plan(_small_units(), mux_predictors, tmp_path)
+    exe = PlanExecutor(plan)
+    _, rep = exe.run()
+    doc = json.loads(json.dumps(rep.to_json()))
+    back = ExecutionReport.from_json(doc)
+    assert back == rep
+    assert back.to_json() == rep.to_json()     # bit-stable
+    # records carry the store-keying provenance
+    for t in rep.timings:
+        assert t.plan_key == plan.key
+        assert t.network_fingerprint == plan.provenance.network_fingerprint
+        assert t.device == plan.provenance.device
+        assert t.host != ""
+    # conv/linear records embed their op; pools don't
+    assert all((t.op is None) == (t.unit == "pool") for t in rep.timings)
+
+
+# ------------------------------------------------------------------ store
+
+def test_measurement_store_append_only(mux_predictors, tmp_path):
+    plan = _plan(_small_units(), mux_predictors, tmp_path / "plans")
+    exe = PlanExecutor(plan)
+    _, rep = exe.run()
+    store = MeasurementStore(tmp_path / "meas")
+    store.append(rep)                          # an ExecutionReport directly
+    assert store.keys() == [plan.key]
+    assert store.count(plan.key) == len(rep.timings)
+    _, rep2 = exe.run()
+    store.append(rep2.timings)                 # or bare records
+    loaded = store.load(plan.key)
+    assert len(loaded) == 2 * len(rep.timings)     # append-only: both runs
+    assert loaded[:len(rep.timings)] == rep.timings
+    # corrupt lines are skipped, never trusted
+    with open(store.path_for(plan.key), "a") as f:
+        f.write("{not json}\n")
+    assert len(store.load(plan.key)) == 2 * len(rep.timings)
+
+
+def test_store_keys_match_plan_cache_digests(mux_predictors, tmp_path):
+    """The store files sit under the same provenance digests as the plan
+    cache, so a plan's measurements are found from its cache key."""
+    cache = PlanCache(tmp_path / "plans")
+    plan = _plan(_small_units(), mux_predictors, tmp_path / "plans")
+    store = MeasurementStore(tmp_path / "meas")
+    _, rep = PlanExecutor(plan).run()
+    store.append(rep)
+    assert store.path_for(plan.key).stem == cache.path_for(
+        plan.provenance).stem
+
+
+# ------------------------------------------- simulator + training records
+
+def test_simulator_measure_records_unified_schema():
+    ops = [LinearOp(64, 128, 256), ConvOp(28, 28, 32, 64, 3, 1)]
+    recs = measure_records(ops, "pixel5", "gpu", seed=3)
+    walls = measure_latency_us_batch(ops, "pixel5", "gpu", seed=3)
+    np.testing.assert_allclose([r.wall_us for r in recs], walls)
+    assert [r.op for r in recs] == ops
+    assert all(r.source == "simulator" and r.backend == "gpu"
+               and r.mode == "simulated" and r.device == "pixel5"
+               for r in recs)
+    # noise-free oracle as the prediction side
+    assert all(r.pred_us > 0 and r.wall_us != r.pred_us for r in recs)
+
+
+def test_records_become_training_samples_with_zero_glue():
+    ops = sample_linear_ops(60, seed=7)
+    recs = measure_records(ops, "moto2022", "cpu3", seed=5)
+    tr_ops, y = training_from_records(recs)
+    assert tr_ops == ops and len(y) == len(ops)
+    pred = train_predictor(tr_ops, "moto2022", "cpu3", whitebox=False,
+                           y_us=y, params=_FAST)
+    out = pred.predict(ops[:5])
+    assert out.shape == (5,) and np.all(np.isfinite(out)) and np.all(out > 0)
+
+
+def test_training_from_records_drops_pools_coexec_and_nonpositive():
+    recs = [record_for_op(LinearOp(1, 8, 8), wall_us=5.0, pred_us=1.0),
+            record_for_op(LinearOp(1, 8, 8), wall_us=0.0, pred_us=1.0),
+            # co-executed: wall times a channel-split run of the full op —
+            # not a valid per-backend (op, latency) pair
+            record_for_op(LinearOp(1, 8, 8), wall_us=2.5, pred_us=1.0,
+                          mode="coexec", source="executor"),
+            MeasurementRecord(index=0, unit="pool", label="p", mode="pool",
+                              c_fast=0, c_slow=0, chained_input=False,
+                              gathered_output=True, wall_us=3.0,
+                              pred_us=0.0)]
+    ops, y = training_from_records(recs)
+    assert len(ops) == 1 and y.tolist() == [5.0]
+    # mixed executed runs split per kind (predictors are per-kind models)
+    recs.append(record_for_op(ConvOp(8, 8, 4, 4, 3, 1), wall_us=7.0,
+                              pred_us=1.0, mode="exclusive",
+                              source="executor"))
+    lin_ops, lin_y = training_from_records(recs, kind="linear")
+    conv_ops, conv_y = training_from_records(recs, kind="conv")
+    assert [o.C_out for o in lin_ops] == [8] and lin_y.tolist() == [5.0]
+    assert len(conv_ops) == 1 and conv_y.tolist() == [7.0]
+
+
+# ------------------------------------------------------------- calibrator
+
+def _synth_records(scale=40.0, slope=1.0, n=24, mode="exclusive"):
+    rng = np.random.default_rng(0)
+    recs = []
+    for i in range(n):
+        pred = float(rng.uniform(50, 5000))
+        wall = scale * pred ** slope * float(np.exp(rng.normal(0, 0.05)))
+        recs.append(record_for_op(LinearOp(1, 8 * (i + 1), 16),
+                                  index=i, wall_us=wall, pred_us=pred,
+                                  mode=mode, source="executor"))
+    return recs
+
+
+def test_calibrator_shrinks_fidelity_error_and_never_increases_it():
+    recs = _synth_records(scale=40.0)
+    cal = Calibrator.fit(recs)
+    pre = fidelity_error(recs)
+    post = cal.fidelity_error(recs)
+    assert post < pre                  # ~log(40) per record shrunk away
+    assert post < 0.1 * pre
+    # identity is always a fit candidate: already-calibrated records
+    # cannot get worse
+    perfect = _synth_records(scale=1.0, n=12)
+    cal2 = Calibrator.fit(perfect)
+    assert cal2.fidelity_error(perfect) <= fidelity_error(perfect) + 1e-9
+
+
+def test_calibrator_fits_per_kind_and_mode():
+    recs = (_synth_records(scale=10.0, mode="exclusive")
+            + _synth_records(scale=100.0, mode="coexec"))
+    cal = Calibrator.fit(recs)
+    assert ("linear", "exclusive") in cal.corrections
+    assert ("linear", "coexec") in cal.corrections
+    assert ("linear", "*") in cal.corrections
+    ex = cal.correction_for("linear", "exclusive")
+    co = cal.correction_for("linear", "coexec")
+    assert ex.b < co.b                 # different offsets per mode
+    # the per-kind aggregate (what wraps per-backend predictors) is fit on
+    # unsplit records only — coexec unit totals must not leak into it
+    assert cal.correction_for("linear", "*").n == ex.n
+    # unknown mode falls back to the per-kind aggregate; unknown kind is
+    # the identity
+    assert cal.correction_for("linear", "never-seen") == \
+        cal.correction_for("linear", "*")
+    np.testing.assert_allclose(cal.correct_us("conv", "*", [7.0]), [7.0])
+    # zero predictions stay zero (the partitioner's empty-side candidates)
+    np.testing.assert_allclose(
+        cal.correct_us("linear", "exclusive", [0.0]), [0.0])
+
+
+def test_calibrator_raises_on_zero_usable_records():
+    pool_only = [MeasurementRecord(
+        index=0, unit="pool", label="p", mode="pool", c_fast=0, c_slow=0,
+        chained_input=False, gathered_output=True, wall_us=3.0, pred_us=0.0)]
+    with pytest.raises(ValueError, match="zero usable"):
+        Calibrator.fit(pool_only)
+
+
+def test_calibrator_persists_across_processes(tmp_path):
+    """Satellite: save → load in a fresh interpreter reproduces the exact
+    corrections and the content-addressed version digest."""
+    cal = Calibrator.fit(_synth_records())
+    path = cal.save(tmp_path / "cal.json")
+    back = Calibrator.load(path)
+    assert back.corrections == cal.corrections
+    assert back.version == cal.version
+    prog = (
+        "from repro.measure import Calibrator\n"
+        f"cal = Calibrator.load({str(path)!r})\n"
+        "print(cal.version, cal.n_records, len(cal.corrections))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    ver, n, ncorr = out.stdout.split()
+    assert ver == cal.version
+    assert (int(n), int(ncorr)) == (cal.n_records, len(cal.corrections))
+
+
+# ----------------------------------------- calibrated predictors + keys
+
+def test_calibrated_predictor_wraps_without_retraining(mux_predictors):
+    cp, _ = mux_predictors
+    cal = Calibrator.fit(_synth_records(scale=3.0))
+    wrapped = cal.wrap(cp)
+    assert isinstance(wrapped, CalibratedPredictor)
+    assert wrapped.device == cp.device
+    ops = [LinearOp(32, 64, 128), ConvOp(14, 14, 32, 64, 3, 1)]
+    base = cp.predict(ops)
+    out = wrapped.predict(ops)
+    # linear ops corrected by the fitted (linear, *) group; conv untouched
+    # (never measured in the synthetic records)
+    corr = cal.correction_for("linear", "*")
+    np.testing.assert_allclose(out[0], float(corr.apply_us(base[0])))
+    np.testing.assert_allclose(out[1], base[1])
+    # re-wrapping never stacks corrections
+    assert cal.wrap(wrapped).inner is cp
+    # checksum unwraps: calibration invalidates via provenance instead
+    assert predictor_checksum(wrapped) == predictor_checksum(cp)
+    assert calibration_version(wrapped) == cal.version
+    assert calibration_version(cp) == ""
+
+
+def test_provenance_calibration_field_changes_key_only_when_set():
+    base = dict(device="moto2022", threads=3, mechanism="svm_poll", step=8,
+                seed=1, network_fingerprint="nf", predictor_checksum="pc")
+    p0 = PlanProvenance(**base)
+    p1 = PlanProvenance(**base, calibration="")
+    p2 = PlanProvenance(**base, calibration="deadbeef")
+    assert p0.key == p1.key            # legacy keys/json stay bit-identical
+    assert "calibration" not in p0.to_json()
+    assert p2.key != p0.key
+    assert p2.to_json()["calibration"] == "deadbeef"
+    assert PlanProvenance.from_json(p0.to_json()) == p0
+    assert PlanProvenance.from_json(p2.to_json()) == p2
+
+
+# ------------------------------------------------- executor warmup guard
+
+def test_warmup_run_does_not_publish_report(mux_predictors, tmp_path):
+    """Satellite: the untimed warmup pass must never land on last_report —
+    a warmup report leaking there would poison the measurement store."""
+    plan = _plan(_small_units(), mux_predictors, tmp_path)
+    exe = PlanExecutor(plan)
+    _, internal = exe._execute()
+    assert exe.last_report is None     # _execute never publishes
+    _, rep = exe.run(warmup=True)
+    assert exe.last_report is rep      # only the timed run published
+
+
+# --------------------------------------------------- acceptance criterion
+
+@pytest.mark.parametrize("network", ["resnet18", "vgg16"])
+def test_recalibrate_and_replan_end_to_end(mux_predictors, tmp_path,
+                                           network):
+    """Acceptance: >= 2 recorded executions -> recalibrate() shrinks the
+    executed-vs-predicted fidelity error; replan() round-trips through the
+    plan cache under a new provenance digest with the old entry untouched.
+    """
+    import repro
+    from repro.core.networks import NETWORKS
+
+    cache_dir = tmp_path / "plans"
+    cache = PlanCache(cache_dir)
+    target = repro.Target(device="moto2022", threads=3)
+    compiled = repro.compile(NETWORKS[network](), target,
+                             predictors=mux_predictors, cache=cache)
+    store = MeasurementStore(tmp_path / "meas")
+    for _ in range(2):
+        compiled.record(store=store, warmup=False)
+    records = store.load(compiled.key)
+    assert len(records) == 2 * len(compiled.plan.schedule)
+
+    cal = compiled.recalibrate(store)
+    assert compiled.calibration is cal
+    pre = fidelity_error(records)
+    post = cal.fidelity_error(records)
+    assert post < pre, (pre, post)
+
+    old_path = cache.path_for(compiled.provenance)
+    old_bytes = old_path.read_bytes()
+    recompiled, diff = compiled.replan(cal, store=store, cache=cache)
+
+    # new digest, old entry untouched
+    assert recompiled.key != compiled.key
+    assert recompiled.provenance.calibration == cal.version
+    assert compiled.provenance.calibration == ""
+    assert old_path.read_bytes() == old_bytes
+    new_path = cache.path_for(recompiled.provenance)
+    assert new_path.exists() and new_path != old_path
+
+    # the diff prices both schedules on the same calibrated grid: the new
+    # schedule is that grid's per-op argmin, so the gain is >= 0
+    assert diff.old_key == compiled.key
+    assert diff.new_key == recompiled.key
+    assert diff.predicted_gain_us >= -1e-9
+    assert diff.n_ops == len(compiled.plan.decisions)
+    assert "plan diff" in diff.summary()
+
+    # replanning again with the same calibrator is a pure warm hit
+    again, diff2 = compiled.replan(cal, store=store, cache=cache)
+    assert again.from_cache and again.key == recompiled.key
+    assert [c.to_json() for c in diff2.changes] == \
+        [c.to_json() for c in diff.changes]
+
+    # the replanned network executes (plan -> executor contract survives)
+    rep = recompiled.profile(warmup=False)
+    assert len(rep.timings) == len(compiled.plan.schedule)
+
+
+# ------------------------------------------------------- serving engine
+
+def _tiny_engine(**kw):
+    from repro.models import build_model, get_config
+    from repro.serving import ServingEngine
+    import jax
+
+    cfg = get_config("rwkv6_1b6").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(cfg, model, params, max_len=32, **kw)
+
+
+def test_serving_mixed_temperature_batch_keeps_greedy_rows_greedy():
+    """Satellite: sampling is per-request — a greedy request batched with
+    a temperature-sampling one must still decode greedily (the engine
+    used to apply batch[0].temperature to every row)."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 100, size=6).astype(np.int32)
+    greedy = Request(rid=0, prompt=prompt, max_new_tokens=6, temperature=0.0)
+    hot = Request(rid=1, prompt=prompt, max_new_tokens=6, temperature=5.0)
+
+    _, e1 = _tiny_engine()
+    ref = e1.run([greedy])[0].tokens          # greedy alone
+    _, e2 = _tiny_engine()
+    out = e2.run([Request(rid=1, prompt=prompt, max_new_tokens=6,
+                          temperature=5.0), greedy])
+    by_rid = {c.rid: c.tokens for c in out}
+    assert by_rid[0] == ref                   # greedy row unaffected
+    assert len(by_rid[1]) == 6
+
+
+def test_serving_all_greedy_batches_stay_deterministic():
+    from repro.serving import Request
+
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, 100, size=5).astype(np.int32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=4)
+            for i in range(2)]
+    _, e1 = _tiny_engine()
+    _, e2 = _tiny_engine()
+    assert [c.tokens for c in e1.run(reqs)] == \
+        [c.tokens for c in e2.run(reqs)]
+
+
+def test_serving_engine_auto_records_and_exposes_drift(mux_predictors,
+                                                       tmp_path):
+    from repro.serving.engine import ServingEngine
+
+    plan = _plan(_small_units(), mux_predictors, tmp_path / "plans")
+
+    class _Model:                      # never traced: jit is lazy
+        @staticmethod
+        def prefill(params, toks, cache):
+            raise NotImplementedError
+
+        @staticmethod
+        def decode_step(params, tok, cache, pos):
+            raise NotImplementedError
+
+    store_dir = tmp_path / "meas"
+    eng = ServingEngine(cfg=None, model=_Model, params={}, coexec_plan=plan,
+                        measurement_store=store_dir)
+    assert eng.drift is None
+    eng.execute_plan()
+    assert eng.drift is None           # one run: nothing to drift from
+    eng.execute_plan()
+    drift = eng.drift
+    assert drift is not None and np.isfinite(drift)
+    store = MeasurementStore(store_dir)
+    assert store.count(plan.key) == 2 * len(plan.schedule)
