@@ -5,11 +5,16 @@ per suite under reports/bench/ (see benchmarks.common.write_bench_report).
 Set BENCH_FULL=1 for paper-scale datasets (slower); default is a reduced
 but representative run.
 
-    PYTHONPATH=src python -m benchmarks.run [--only tab2]
+    PYTHONPATH=src python -m benchmarks.run [--only tab2] [--list]
+
+``--list`` prints the registered suite names (one per line) and exits 0 —
+CI enumerates suites from here instead of hard-coding them.  Suites
+resolve lazily: listing never imports jax or the suite modules.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
 from pathlib import Path
@@ -17,37 +22,41 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks import (calibration_bench, fig2_crossover, fig5_prediction,
-                        fig6_discontinuity, fig7_importance, roofline_report,
-                        tab1_mape, tab2_speedup, tab3_e2e, tab4_ablation)
-
+#: suite name -> module exposing `run()` (and optionally `measurements()`)
 SUITES = {
-    "fig2": fig2_crossover.run,
-    "fig5": fig5_prediction.run,
-    "fig6": fig6_discontinuity.run,
-    "fig7": fig7_importance.run,
-    "tab1": tab1_mape.run,
-    "tab2": tab2_speedup.run,
-    "tab3": tab3_e2e.run,
-    "tab4": tab4_ablation.run,
-    "roofline": roofline_report.run,
-    "calibration": calibration_bench.run,
+    "fig2": "benchmarks.fig2_crossover",
+    "fig5": "benchmarks.fig5_prediction",
+    "fig6": "benchmarks.fig6_discontinuity",
+    "fig7": "benchmarks.fig7_importance",
+    "tab1": "benchmarks.tab1_mape",
+    "tab2": "benchmarks.tab2_speedup",
+    "tab3": "benchmarks.tab3_e2e",
+    "tab4": "benchmarks.tab4_ablation",
+    "roofline": "benchmarks.roofline_report",
+    "calibration": "benchmarks.calibration_bench",
 }
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro bench")
     ap.add_argument("--only", choices=list(SUITES), default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suite names and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for name in SUITES:
+            print(name)
+        return 0
     names = [args.only] if args.only else list(SUITES)
 
     from benchmarks.common import write_bench_report
 
     print("name,us_per_call,derived")
     for name in names:
+        mod = importlib.import_module(SUITES[name])
         t0 = time.time()
         try:
-            rows = [str(r) for r in SUITES[name]()]
+            rows = [str(r) for r in mod.run()]
             for row in rows:
                 print(row)
         except Exception as e:                       # noqa: BLE001
@@ -58,13 +67,13 @@ def main(argv=None) -> None:
         # a suite that collects unified-schema records exposes a module-
         # level `measurements()` next to its `run` — one registration
         # point shared with the standalone bench_main entry
-        mod = sys.modules[SUITES[name].__module__]
         measurements_fn = getattr(mod, "measurements", None)
         path = write_bench_report(
             name, rows, extra={"wallclock_s": round(wall, 2)},
             measurements=measurements_fn() if measurements_fn else None)
         print(f"# wrote {path}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -20,6 +20,7 @@ __version__ = "0.1.0"
 _EXPORTS = {
     "Target": "repro.api",
     "CompiledNetwork": "repro.api",
+    "available_networks": "repro.api",
     "compile": "repro.api",
     "MODE_PREDICTED": "repro.api",
     "MODE_GRID": "repro.api",

@@ -16,13 +16,14 @@ serving).  This module is the single front door:
 `Target` captures everything a plan's validity depends on at the request
 level (device, threads, sync mechanism, candidate-grid step, measurement
 seed, mesh policy) and validates itself eagerly.  `compile` resolves the
-network (name, unit list, or bare op list), trains-or-loads the mux
-predictors when the mode needs them, runs the *cached* planners
-(`plan_network_cached` / `partition_ops_plan_cached` /
-`grid_plan_network_cached` — provenance-identical to calling them
-directly, so facade and pre-facade callers share on-disk cache entries
-bit-for-bit), and returns a `CompiledNetwork`: the `CoexecPlan` plus a
-lazily-built `PlanExecutor` and save/load/explain on top.
+network (a `repro.graph.Graph`, a registered network or model name, a
+unit list, or a bare op list), trains-or-loads the mux predictors when
+the mode needs them, runs the *cached* planners (`plan_graph_cached` /
+`partition_ops_plan_cached` / `grid_plan_graph_cached` —
+provenance-identical to calling them directly, so facade and pre-facade
+callers share on-disk cache entries bit-for-bit), and returns a
+`CompiledNetwork`: the `CoexecPlan` plus a lazily-built `PlanExecutor`
+and save/load/explain on top.
 
 Importing this module never imports jax; execution machinery loads on the
 first `run`/`profile`/`executor` call.
@@ -44,9 +45,10 @@ from repro.core.networks import NETWORKS, Unit
 from repro.core.simulator.devices import DEVICES
 from repro.core.sync import SyncMechanism
 from repro.core.types import ConvOp, LinearOp, Op
-from repro.runtime.cache import (PlanCache, grid_plan_network_cached,
+from repro.graph.ir import Graph, from_units
+from repro.runtime.cache import (PlanCache, grid_plan_graph_cached,
                                  partition_ops_plan_cached,
-                                 plan_network_cached)
+                                 plan_graph_cached)
 from repro.runtime.plan import CoexecPlan, PlanProvenance, spec_label
 
 #: compile() planning modes
@@ -164,32 +166,52 @@ def _trained_mux_predictors(device: str, threads: int, *, samples: int,
 
 # ------------------------------------------------------- network resolution
 
-def _resolve_units(network) -> Tuple[List[Unit], bool]:
-    """Normalize `compile`'s first argument to (units, is_network).
+def available_networks() -> Dict[str, List[str]]:
+    """Every name `compile` resolves, from the two registries: legacy
+    unit-chain networks (`core.networks.NETWORKS`) and decoder-block model
+    graphs (`graph.frontends`: tiny configs + `models.registry`)."""
+    from repro.graph.frontends import model_names
+    return {"networks": sorted(NETWORKS), "models": model_names()}
 
-    Accepts a registered network name, a unit list (("conv"/"linear"/
-    "pool", payload) tuples), or a bare op list.  Bare op lists are
-    planned per-op (no end-to-end report, threads/seed-free provenance —
-    the Table 2 contract), hence the flag.
+
+def _unknown_name_error(name: str) -> ValueError:
+    names = available_networks()
+    return ValueError(
+        f"unknown network {name!r}; registered unit networks: "
+        f"{names['networks']}; model graphs (via graph.from_model): "
+        f"{names['models']}")
+
+
+def _resolve_graph(network) -> Tuple[Union[Graph, List[Op]], bool]:
+    """Normalize `compile`'s first argument to (graph_or_ops, is_graph).
+
+    Accepts a `repro.graph.Graph`, a registered network or model name, a
+    unit list (("conv"/"linear"/"pool", payload) tuples), or a bare op
+    list.  Everything except bare op lists lowers to a Graph; bare op
+    lists are planned per-op (no end-to-end report, threads/seed-free
+    provenance — the Table 2 contract), hence the flag.
     """
+    if isinstance(network, Graph):
+        return network, True
     if isinstance(network, str):
-        if network not in NETWORKS:
-            raise ValueError(f"unknown network {network!r}; "
-                             f"choices: {sorted(NETWORKS)}")
-        return list(NETWORKS[network]()), True
+        if network in NETWORKS:
+            return from_units(NETWORKS[network]()), True
+        from repro.graph.frontends import from_model, model_names
+        if network in model_names():
+            return from_model(network), True
+        raise _unknown_name_error(network)
     seq = list(network)
     if not seq:
         raise ValueError("cannot compile an empty network")
     if all(isinstance(e, (LinearOp, ConvOp)) for e in seq):
-        from repro.kernels.registry import op_kind
-        return [(op_kind(op), op) for op in seq], False
+        return seq, False
     if all(isinstance(e, tuple) and len(e) == 2 and isinstance(e[0], str)
            for e in seq):
-        return seq, True
+        return from_units(seq), True
     raise TypeError(
-        "network must be a registered name, a unit list "
-        "[(kind, payload), ...], or a bare op list [LinearOp/ConvOp, ...]; "
-        f"got {type(seq[0]).__name__} elements")
+        "network must be a repro.graph.Graph, a registered name, a unit "
+        "list [(kind, payload), ...], or a bare op list "
+        f"[LinearOp/ConvOp, ...]; got {type(seq[0]).__name__} elements")
 
 
 # ------------------------------------------------------------------ compile
@@ -203,8 +225,8 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             ) -> "CompiledNetwork":
     """Compile a network into a `CompiledNetwork` (cached planning).
 
-    * `network` — a registered name ("resnet18"), a unit list, or a bare
-      op list.
+    * `network` — a `repro.graph.Graph`, a registered name ("resnet18",
+      "tiny_decoder", "gemma3-12b", ...), a unit list, or a bare op list.
     * `target` — the validated `Target` (device/threads/mechanism/step/
       seed/mesh).
     * `mode` — "predicted" plans with trained GBDT predictors (the paper's
@@ -226,7 +248,7 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
     if mode not in (MODE_PREDICTED, MODE_GRID):
         raise ValueError(f"unknown mode {mode!r}; "
                          f"choices: ['predicted', 'grid']")
-    units, is_network = _resolve_units(network)
+    graph_or_ops, is_graph = _resolve_graph(network)
     if not isinstance(cache, PlanCache):
         cache = PlanCache(Path(cache))
     mech = target.sync_mechanism
@@ -237,8 +259,12 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             raise ValueError("mode='grid' is measurement-driven and takes "
                              "no predictors; drop predictors= or use "
                              "mode='predicted'")
-        plan = grid_plan_network_cached(
-            units, target.device, target.threads, mechanism=mech,
+        if not is_graph:
+            from repro.kernels.registry import op_kind
+            graph_or_ops = from_units(
+                [(op_kind(op), op) for op in graph_or_ops])
+        plan = grid_plan_graph_cached(
+            graph_or_ops, target.device, target.threads, mechanism=mech,
             step=target.step, seed=target.seed, cache=cache)
     else:
         if predictors is None:
@@ -250,14 +276,14 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             raise ValueError(
                 f"predictors were trained for {gpu_pred.device!r} but the "
                 f"target device is {target.device!r}")
-        if is_network:
-            plan = plan_network_cached(
-                units, cpu_pred, gpu_pred, threads=target.threads,
+        if is_graph:
+            plan = plan_graph_cached(
+                graph_or_ops, cpu_pred, gpu_pred, threads=target.threads,
                 mechanism=mech, step=target.step, seed=target.seed,
                 cache=cache)
         else:
             plan = partition_ops_plan_cached(
-                [payload for _, payload in units], cpu_pred, gpu_pred,
+                graph_or_ops, cpu_pred, gpu_pred,
                 mechanism=mech, step=target.step, cache=cache)
 
     return CompiledNetwork(plan=plan, target=target, mode=mode,
@@ -309,11 +335,22 @@ class CompiledNetwork:
 
     @property
     def units(self) -> List[Unit]:
+        """Legacy unit-list view (chain plans only; raises for DAG plans
+        — use `.graph` instead)."""
         return self.plan.units
+
+    @property
+    def graph(self):
+        """The compiled network's op graph (`repro.graph.Graph`)."""
+        return self.plan.graph_ir()
 
     @property
     def decisions(self):
         return self.plan.decisions
+
+    @property
+    def decisions_by_node(self):
+        return self.plan.decisions_by_node
 
     def report(self):
         """The planning-time `PlanReport` (None for bare-op plans)."""
@@ -451,28 +488,32 @@ class CompiledNetwork:
             f"cpu{prov.threads} mechanism={prov.mechanism} "
             f"step={prov.step} planner={prov.planner}",
             f"  key={self.key}  fingerprint={prov.network_fingerprint}",
-            f"  {'idx':>3}  {'label':<42} {'cpu':>5}/{'gpu':<5} "
+            f"  {'node':>12}  {'label':<42} {'cpu':>5}/{'gpu':<5} "
             f"{'pred_us':>9}  placement",
         ]
         n_co = 0
-        for i, spec in enumerate(self.plan.exec_specs()):
+        for spec in self.plan.exec_specs():
             label = spec_label(spec)     # same renderer as execute --per-op
-            if spec.unit == "pool":
-                lines.append(f"  {i:>3}  {label:<42} {'-':>5}/{'-':<5} "
+            tag = spec.node_id
+            if spec.unit in ("pool", "add"):
+                lines.append(f"  {tag:>12}  {label:<42} {'-':>5}/{'-':<5} "
                              f"{'-':>9}  gpu (no sync)")
                 continue
             c_cpu, c_gpu = spec.c_slow, spec.c_fast
             if spec.coexec:
                 placement = "co-executed"
                 n_co += 1
+            elif spec.unit in ("attention", "ssm"):
+                placement = "gpu-only (unsplit kind)"
             elif c_gpu:
                 placement = "gpu-only"
             else:
                 placement = "cpu-only"
-            lines.append(f"  {i:>3}  {label:<42} {c_cpu:>5}/"
+            lines.append(f"  {tag:>12}  {label:<42} {c_cpu:>5}/"
                          f"{c_gpu:<5} {spec.pred_total_us:>9.1f}  "
                          f"{placement}")
-        n_ops = sum(1 for e in self.plan.schedule if e["unit"] != "pool")
+        n_ops = sum(1 for e in self.plan.schedule
+                    if e["unit"] not in ("pool", "add"))
         tail = f"  {n_co}/{n_ops} ops co-executed"
         if self.plan.end_to_end_us is not None:
             speedup = self.plan.baseline_us / self.plan.end_to_end_us

@@ -28,12 +28,22 @@ from typing import Optional, Sequence
 
 
 def _add_compile_args(ap: argparse.ArgumentParser) -> None:
-    from repro.core.networks import NETWORKS
     from repro.core.simulator.devices import DEVICES
     from repro.core.sync import SyncMechanism
 
+    # no choices= here: unknown names surface repro.api's ValueError, which
+    # lists both registries (unit networks + model graphs) in one message
     ap.add_argument("--network", default="resnet18",
-                    choices=sorted(NETWORKS))
+                    help="unit network (vgg16, resnet18, ...) or any name "
+                         "--model accepts")
+    ap.add_argument("--model", default=None,
+                    help="decoder-block model graph via graph.from_model "
+                         "(tiny_decoder, tiny_ssm, gemma3-12b, ...); "
+                         "overrides --network")
+    ap.add_argument("--cache-len", type=int, default=128,
+                    help="KV-cache length of --model attention nodes")
+    ap.add_argument("--blocks", type=int, default=1,
+                    help="decoder blocks to chain for --model graphs")
     ap.add_argument("--device", default="moto2022", choices=sorted(DEVICES))
     ap.add_argument("--threads", type=int, default=3)
     ap.add_argument("--mechanism", default="svm_poll",
@@ -56,16 +66,47 @@ def _add_compile_args(ap: argparse.ArgumentParser) -> None:
                          "(a load is checksum-identical to a retrain)")
 
 
+class _UserInputError(Exception):
+    """A bad CLI input (unknown name, invalid target, ...) — printed as a
+    clean one-line error; internal failures keep their tracebacks."""
+
+
+def _network_arg(args):
+    """The compile() input: model names — via --model or --network — build
+    a decoder-block graph honoring the CLI's blocks/cache-len knobs;
+    everything else resolves by name inside `repro.compile`."""
+    name = args.model or args.network
+    if args.model or _is_model_name(name):
+        from repro.graph import from_model
+        return from_model(name, blocks=args.blocks,
+                          cache_len=args.cache_len)
+    return name
+
+
+def _is_model_name(name: str) -> bool:
+    from repro.core.networks import NETWORKS
+    if name in NETWORKS:
+        return False
+    from repro.graph.frontends import model_names
+    return name in model_names()
+
+
 def _compile(args):
     from repro.api import Target, compile as _api_compile
-    target = Target(device=args.device, threads=args.threads,
-                    mechanism=args.mechanism, step=args.step,
-                    seed=args.seed)
     t0 = time.time()
-    compiled = _api_compile(args.network, target, mode=args.mode,
-                            cache=args.cache_dir, samples=args.samples,
-                            estimators=args.estimators,
-                            predictor_cache=args.predictor_cache)
+    # ValueErrors up to and including compile() are user-input problems
+    # (unknown name/device/mechanism, bad mode, predictor/target mismatch)
+    # and print as one-line errors; later failures keep their tracebacks
+    try:
+        target = Target(device=args.device, threads=args.threads,
+                        mechanism=args.mechanism, step=args.step,
+                        seed=args.seed)
+        compiled = _api_compile(_network_arg(args), target, mode=args.mode,
+                                cache=args.cache_dir, samples=args.samples,
+                                estimators=args.estimators,
+                                predictor_cache=args.predictor_cache)
+    except ValueError as e:
+        raise _UserInputError(str(e)) from e
     return compiled, time.time() - t0
 
 
@@ -78,7 +119,8 @@ def _cmd_plan(args) -> int:
     compiled, dt = _compile(args)
     plan = compiled.plan
     n_co = sum(1 for d in plan.decisions if not d.exclusive)
-    print(f"plan {args.network} on {args.device} (cpu{args.threads}, "
+    name = args.model or args.network
+    print(f"plan {name} on {args.device} (cpu{args.threads}, "
           f"{args.mechanism}, {args.mode}): cache {_cache_status(compiled)}")
     print(f"  compiled in {dt:.1f}s (predictors + planning; a warm hit is "
           f"a pure JSON read)")
@@ -110,7 +152,7 @@ def _cmd_execute(args) -> int:
               f"(device {compiled.target.device}, key {compiled.key})")
     else:
         compiled, _ = _compile(args)
-        print(f"execute {args.network} on {args.device} plan "
+        print(f"execute {args.model or args.network} on {args.device} plan "
               f"{compiled.key} (cache {_cache_status(compiled)})")
     exe = compiled.executor()
     groups = ("2-group split mesh" if exe.split_capable
@@ -137,8 +179,8 @@ def _cmd_calibrate(args) -> int:
               file=sys.stderr)
         return 2
     compiled, dt = _compile(args)
-    print(f"calibrate {args.network} on {args.device} (cpu{args.threads}, "
-          f"{args.mechanism}): plan {compiled.key} "
+    print(f"calibrate {args.model or args.network} on {args.device} "
+          f"(cpu{args.threads}, {args.mechanism}): plan {compiled.key} "
           f"(cache {_cache_status(compiled)}, {dt:.1f}s)")
     store = MeasurementStore(Path(args.store_dir))
     for i in range(args.runs):
@@ -262,11 +304,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                         "repro.launch.serve; e.g. --arch gemma3_12b)")
 
     args = ap.parse_args(argv)
-    if args.cmd == "plan":
-        return _cmd_plan(args)
-    if args.cmd == "calibrate":
-        return _cmd_calibrate(args)
-    return _cmd_execute(args)
+    try:
+        if args.cmd == "plan":
+            return _cmd_plan(args)
+        if args.cmd == "calibrate":
+            return _cmd_calibrate(args)
+        return _cmd_execute(args)
+    except _UserInputError as e:
+        # e.g. an unknown --network/--model: surface the registry listing
+        # from repro.api instead of a traceback
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

@@ -15,9 +15,11 @@ the api facade's Target validation and artifact codecs stay jax-free.
 import importlib
 
 _EXPORTS = {
+    "AttnOp": "repro.core.types",
     "ConvOp": "repro.core.types",
     "LinearOp": "repro.core.types",
     "Op": "repro.core.types",
+    "SSMOp": "repro.core.types",
     "SyncMechanism": "repro.core.sync",
     "collective_overhead_us": "repro.core.sync",
     "sync_overhead_us": "repro.core.sync",
@@ -26,7 +28,11 @@ _EXPORTS = {
     "optimal_partition": "repro.core.partitioner",
     "realized_latency_us": "repro.core.partitioner",
     "speedup_vs_gpu": "repro.core.partitioner",
+    "GraphPlanReport": "repro.core.planner",
     "PlanReport": "repro.core.planner",
+    "grid_plan_graph": "repro.core.planner",
+    "opaque_latency_us": "repro.core.planner",
+    "plan_graph": "repro.core.planner",
     "plan_network": "repro.core.planner",
     "SplitPlan": "repro.core.coexec",
     "coexec_matmul": "repro.core.coexec",

@@ -4,6 +4,12 @@ Each network is a flat list of scheduling units: ("conv", ConvOp),
 ("linear", LinearOp) or ("pool", out_bytes).  Pooling is always scheduled on
 the GPU (paper: negligible latency, avoids a synchronization point).
 Input resolution is 224x224x3, as in the paper's ImageNet models.
+
+The unit list is the *legacy* representation: the pipeline now plans and
+executes over the typed op graph (`repro.graph`), and these lists lower
+into it via `graph.from_units` — fingerprint-compatible, so nothing here
+changed meaning.  New workloads (decoder blocks with attention/SSM nodes,
+fan-out, residuals) are expressed directly as graphs, not unit lists.
 """
 from __future__ import annotations
 
@@ -40,6 +46,9 @@ def unit_output_shape(unit: Unit, c_prev: int = 0) -> Tuple[int, ...]:
 def pool_out_edge(pool_bytes: int, c: int) -> int:
     """Output edge length of a square pool unit from its recorded float32
     byte count: bytes = 4 * edge^2 * c (edge 1 = global pooling)."""
+    if pool_bytes <= 0:
+        raise ValueError(f"pool unit needs a positive output byte count, "
+                         f"got {pool_bytes}")
     if c <= 0:
         raise ValueError(f"pool unit needs a positive channel count, got {c}")
     return max(1, math.isqrt(max(1, pool_bytes // (4 * c))))

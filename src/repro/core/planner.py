@@ -17,11 +17,22 @@ The whole network is planned in a fixed number of batched calls: one
 baseline measurement batch, two predictor batches covering every candidate
 split of every op, and two realized-latency measurement batches — no
 per-candidate (or per-op) Python loops on the scoring hot path.
+
+`plan_graph` is the IR-era entry point: it walks a `repro.graph.Graph` in
+topological order, partitions every *splittable* node (conv/linear) through
+the same batched calls, and charges non-splittable op nodes (attention,
+ssm) an analytic GPU-side latency (`opaque_latency_us`) — they stay
+unsplit, like pooling, but unlike pooling they are real compute whose
+charge scales with the op.  On a unit-chain graph the walk performs the
+identical float operations in the identical order as `plan_network`, so
+decisions *and* totals are bit-equal — the compatibility contract the
+plan cache relies on.  `plan_network` remains the legacy unit-list
+implementation (and the reference the equivalence tests pin against).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import TYPE_CHECKING, Dict, List, Sequence
 
 import numpy as np
 
@@ -33,6 +44,10 @@ from repro.core.predictor.train import LatencyPredictor
 from repro.core.simulator.devices import DEVICES
 from repro.core.simulator.measure import measure_latency_us_batch
 from repro.core.sync import SyncMechanism
+from repro.core.types import Op
+
+if TYPE_CHECKING:
+    from repro.graph.ir import Graph
 
 
 @dataclasses.dataclass
@@ -104,3 +119,131 @@ def plan_network(units: Sequence[Unit], cpu_pred: LatencyPredictor,
     return PlanReport(device=device, threads=threads, baseline_us=baseline,
                       individual_us=individual, end_to_end_us=e2e,
                       decisions=decisions)
+
+
+# ----------------------------------------------------------- graph planning
+
+def opaque_latency_us(op: Op, device: str) -> float:
+    """Analytic GPU-side charge for a non-splittable op node (attention,
+    ssm): one dispatch plus the roofline max of compute and memory time.
+    Deterministic — it keys plan caching like every other planning input."""
+    dev = DEVICES[device]
+    bytes_total = op.input_bytes + op.weight_bytes + op.output_bytes
+    compute_us = op.flops / (dev.gpu_gflops * 1e3)
+    mem_us = bytes_total / (dev.gpu_mem_gbps * 1e3)
+    return dev.gpu_dispatch_us + max(compute_us, mem_us)
+
+
+@dataclasses.dataclass
+class GraphPlanReport:
+    """`plan_graph`'s result: per-node decisions keyed by node id.
+
+    `decisions` holds the splittable (conv/linear) nodes' partition
+    choices; `opaque_us` the analytic charges of non-splittable op nodes
+    (attention/ssm).  Totals follow the `PlanReport` semantics.
+    """
+
+    device: str
+    threads: int
+    baseline_us: float
+    individual_us: float
+    end_to_end_us: float
+    decisions: Dict[str, PartitionDecision]
+    opaque_us: Dict[str, float]
+
+    @property
+    def individual_speedup(self) -> float:
+        return self.baseline_us / self.individual_us
+
+    @property
+    def end_to_end_speedup(self) -> float:
+        return self.baseline_us / self.end_to_end_us
+
+
+def plan_graph(graph: "Graph", cpu_pred: LatencyPredictor,
+               gpu_pred: LatencyPredictor, *, threads: int,
+               mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+               step: int = 8, seed: int = 1) -> GraphPlanReport:
+    """Plan a `repro.graph.Graph` (the IR-era `plan_network`).
+
+    Splittable nodes are partitioned in the same batched predictor /
+    measurement calls as the unit-list path; structural nodes (pool, add)
+    are charged one trivial GPU dispatch; attention/ssm nodes get the
+    analytic `opaque_latency_us` charge and a forced exclusive placement.
+    The boundary-traffic term follows graph edges: a node's crossing cost
+    compares its CPU-channel fraction against its *producer's* (0 for
+    structural and opaque producers, which materialize GPU-side) — on a
+    chain this is exactly `plan_network`'s consecutive-layer rule.
+    """
+    device = gpu_pred.device
+    dev = DEVICES[device]
+
+    split_nodes = graph.splittable_nodes()
+    ops = [n.op for n in split_nodes]
+    gpu_only = measure_latency_us_batch(ops, device, "gpu", seed=seed)
+    decision_list = optimal_partition_batch(ops, cpu_pred, gpu_pred,
+                                            mechanism=mechanism, step=step)
+    t_co = realized_latency_us_batch(decision_list, device, threads,
+                                     mechanism=mechanism, seed=seed)
+
+    decisions: Dict[str, PartitionDecision] = {}
+    opaque_us: Dict[str, float] = {}
+    split_frac: Dict[str, float] = {}      # node id -> CPU-channel fraction
+    baseline = 0.0
+    individual = 0.0
+    e2e = 0.0
+    i = 0
+    for node in graph:
+        if node.splittable:
+            op = node.op
+            baseline += float(gpu_only[i])
+            individual += float(t_co[i])
+            dec = decision_list[i]
+            decisions[node.id] = dec
+            frac = dec.c_cpu / max(1, op.C_out)
+            frac_in = split_frac.get(node.inputs[0], 0.0) \
+                if node.inputs else 0.0
+            crossing = abs(frac - frac_in) * op.input_bytes
+            boundary_us = crossing / (dev.cpu_mem_gbps * 1e3)
+            e2e += float(t_co[i]) + boundary_us
+            split_frac[node.id] = frac
+            i += 1
+        elif node.op is not None:          # attention / ssm: exclusive
+            t = opaque_latency_us(node.op, device)
+            opaque_us[node.id] = t
+            baseline += t
+            individual += t
+            e2e += t
+            split_frac[node.id] = 0.0
+        else:                              # pool / add: trivial GPU dispatch
+            t = _pool_latency_us(device)
+            baseline += t
+            individual += t
+            e2e += t
+            split_frac[node.id] = 0.0
+
+    return GraphPlanReport(device=device, threads=threads,
+                           baseline_us=baseline, individual_us=individual,
+                           end_to_end_us=e2e, decisions=decisions,
+                           opaque_us=opaque_us)
+
+
+def grid_plan_graph(graph: "Graph", device: str, threads: int, *,
+                    mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                    step: int = 8, seed: int = 0) -> GraphPlanReport:
+    """Measurement-driven (oracle) graph planning: grid-searches every
+    splittable node, charges opaque nodes analytically.  No end-to-end
+    totals — the grid oracle is a per-op upper bound (Table 2), so the
+    report carries decisions and opaque charges only (totals 0)."""
+    from repro.core.partitioner import grid_search_partition_batch
+
+    split_nodes = graph.splittable_nodes()
+    decision_list = grid_search_partition_batch(
+        [n.op for n in split_nodes], device, threads, mechanism=mechanism,
+        step=step, seed=seed)
+    decisions = {n.id: d for n, d in zip(split_nodes, decision_list)}
+    opaque_us = {n.id: opaque_latency_us(n.op, device) for n in graph
+                 if n.op is not None and not n.splittable}
+    return GraphPlanReport(device=device, threads=threads, baseline_us=0.0,
+                           individual_us=0.0, end_to_end_us=0.0,
+                           decisions=decisions, opaque_us=opaque_us)

@@ -4,6 +4,15 @@ The paper partitions *individual* linear and convolutional operations along
 their output channels (Section 2).  These dataclasses are the common currency
 between the hardware simulator, the latency predictors, the partitioner and
 the end-to-end planner.
+
+Beyond the paper's conv/linear grammar, the graph IR (`repro.graph`) also
+schedules decoder-block ops: `AttnOp` (single-position decode attention
+over a KV cache) and `SSMOp` (a chunked SSD state-space scan).  These are
+*not* output-channel-splittable — the kernel registry marks them
+`splittable=False` and the planner schedules them exclusively on the
+GPU-analogue side — but they share the accounting surface (`flops`,
+`input_bytes`, `weight_bytes`, `output_bytes`) so analytic latency charges
+and measurement records treat every op kind uniformly.
 """
 from __future__ import annotations
 
@@ -78,8 +87,94 @@ class ConvOp:
         return dataclasses.replace(self, C_out=c_out)
 
 
-Op = Union[LinearOp, ConvOp]
+@dataclasses.dataclass(frozen=True)
+class AttnOp:
+    """Single-position (decode-step) GQA attention over a length-S KV cache.
+
+    The activation is the current token's query block, flattened to
+    (1, H * hd); the KV cache is the op's parameter tensor (2, S, KV, hd)
+    — state, not activation, exactly as in a serving decode step.  The op
+    attends causally to positions 0..S-1 (optionally sliding-window
+    limited) and produces the (1, H * hd) attended block.
+    """
+
+    H: int                    # query heads
+    S: int                    # cache length (attends to positions 0..S-1)
+    KV: int                   # KV heads (GQA; H % KV == 0)
+    hd: int                   # head dimension
+    window: int = 0           # 0 = full causal attention
+
+    def __post_init__(self):
+        if self.H < 1 or self.KV < 1 or self.H % self.KV:
+            raise ValueError(f"AttnOp needs H divisible by KV, "
+                             f"got H={self.H} KV={self.KV}")
+        if self.S < 1 or self.hd < 1:
+            raise ValueError(f"AttnOp needs positive S/hd, "
+                             f"got S={self.S} hd={self.hd}")
+
+    @property
+    def flops(self) -> int:
+        # q.k scores + probs.v, each 2*H*S*hd MACs-as-flops
+        return 4 * self.H * self.S * self.hd
+
+    @property
+    def input_bytes(self) -> int:
+        return 4 * self.H * self.hd
+
+    @property
+    def weight_bytes(self) -> int:
+        return 4 * 2 * self.S * self.KV * self.hd     # the KV cache
+
+    @property
+    def output_bytes(self) -> int:
+        return 4 * self.H * self.hd
 
 
-def op_with_cout(op: Op, c_out: int) -> Op:
+@dataclasses.dataclass(frozen=True)
+class SSMOp:
+    """Chunked SSD (Mamba2-style) scan over T tokens.
+
+    The activation is the inner-projected token block (T, H * hd); the
+    B/C/dt projections, the per-head decay and the carried state are the
+    op's parameter vector (flattened; the lowering unpacks and applies the
+    stabilizing transforms).  Output is the scanned (T, H * hd) block.
+    """
+
+    T: int                    # tokens scanned
+    H: int                    # SSM heads
+    hd: int                   # head dimension
+    N: int                    # state dimension per head
+
+    def __post_init__(self):
+        if min(self.T, self.H, self.hd, self.N) < 1:
+            raise ValueError(f"SSMOp needs positive dims, got {self}")
+
+    @property
+    def flops(self) -> int:
+        # per token: state update (~4*H*hd*N) + output contraction (2*H*hd*N)
+        return 6 * self.T * self.H * self.hd * self.N
+
+    @property
+    def input_bytes(self) -> int:
+        return 4 * self.T * self.H * self.hd
+
+    @property
+    def weight_bytes(self) -> int:
+        # b, c: (T, N) each; dt: (T, H); a: (H,); state0: (H, hd, N)
+        return 4 * (2 * self.T * self.N + self.T * self.H + self.H
+                    + self.H * self.hd * self.N)
+
+    @property
+    def output_bytes(self) -> int:
+        return 4 * self.T * self.H * self.hd
+
+
+#: the output-channel-splittable kinds — the paper's partitioning domain
+SplittableOp = Union[LinearOp, ConvOp]
+
+#: every schedulable op kind (graph IR node payloads)
+Op = Union[LinearOp, ConvOp, AttnOp, SSMOp]
+
+
+def op_with_cout(op: SplittableOp, c_out: int) -> SplittableOp:
     return op.with_cout(c_out)

@@ -1,0 +1,44 @@
+"""`repro.graph` — the typed op-graph IR.
+
+`Graph` / `Node` (ir.py) replace the flat legacy ``List[Unit]`` as the
+network representation the planner, plan cache, executor, and measurement
+layers consume.  Frontends lower into it:
+
+  * `from_units(units)` — exact compat path for the paper's conv nets
+    (fingerprint-identical to the legacy unit-list digest, so existing
+    plan caches stay warm);
+  * `from_model(name_or_config)` — decoder-block graphs (attention via
+    `kernels/decode_attention`, SSM via `kernels/ssd_chunk`) from
+    `repro.models` configs;
+  * direct `Graph([Node(...), ...])` construction.
+
+Exports resolve lazily (PEP 562): importing `repro.graph` (or building
+graphs from units) never imports jax or the model zoo — `from_model`
+resolves the model registry on first use.
+"""
+import importlib
+
+_EXPORTS = {
+    "GRAPH_SCHEMA_VERSION": "repro.graph.ir",
+    "STRUCTURAL_KINDS": "repro.graph.ir",
+    "Graph": "repro.graph.ir",
+    "Node": "repro.graph.ir",
+    "from_units": "repro.graph.ir",
+    "TINY_CONFIGS": "repro.graph.frontends",
+    "fan_out_demo": "repro.graph.frontends",
+    "from_model": "repro.graph.frontends",
+    "model_names": "repro.graph.frontends",
+    "resolve_config": "repro.graph.frontends",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

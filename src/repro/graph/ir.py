@@ -1,0 +1,371 @@
+"""The typed op-graph IR: one network representation for the whole pipeline.
+
+The paper's networks were a flat ``List[Unit]`` of ("conv"|"linear"|"pool",
+payload) tuples — linear chains only, which shut transformer/SSM blocks out
+of the planner even though their kernels were already registered.  This
+module replaces that list with a real IR:
+
+  * `Node(id, kind, op, inputs)` — one scheduling unit.  `kind` is either
+    a kernel-registry op kind ("conv", "linear", "attention", "ssm") with
+    its `op` payload, or a structural kind: "pool" (carries `pool_bytes`,
+    always GPU-side, as in the paper) and "add" (elementwise residual
+    join, >= 2 inputs).
+  * `Graph` — validated, topologically ordered, shape-inferred, and
+    JSON-serializable.  Edges are explicit (`Node.inputs`), so fan-out is
+    a first-class property: the executor gathers a shared split output
+    exactly once, and gather-elision becomes "the sole consumer is a
+    compatible split node" instead of an adjacent-index special case.
+
+`fingerprint()` is content-addressed (node *positions*, not names, enter
+the digest — renaming ids never invalidates a plan cache) and versioned
+for compatibility: a graph that is exactly a legacy unit chain fingerprints
+identically to `repro.runtime.plan.network_fingerprint(units)`, so every
+pre-IR `PlanProvenance.network_fingerprint` key stays warm; any real DAG
+(fan-out, residual adds, attention/SSM nodes) digests under the
+``graph``-tagged canonical form instead.
+
+This module is deliberately jax-free: importing it (or planning over it)
+never pulls in execution machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.networks import Unit, pool_out_edge
+from repro.core.types import Op
+from repro.kernels import registry
+
+GRAPH_SCHEMA_VERSION = 1
+
+#: node kinds with no kernel-registry op payload
+STRUCTURAL_KINDS = ("pool", "add")
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One scheduling unit of the op graph.
+
+    `inputs` name the producing nodes (explicit edges).  A node with no
+    inputs is a source: it reads the graph input.  Op-kind nodes take at
+    most one input, "pool" exactly one, "add" at least two.
+    """
+
+    id: str
+    kind: str
+    op: Optional[Op] = None
+    pool_bytes: int = 0
+    inputs: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if not self.id or not isinstance(self.id, str):
+            raise ValueError(f"node id must be a non-empty string, "
+                             f"got {self.id!r}")
+        object.__setattr__(self, "inputs", tuple(self.inputs))
+        if self.kind in STRUCTURAL_KINDS:
+            if self.op is not None:
+                raise ValueError(f"node {self.id!r}: structural kind "
+                                 f"{self.kind!r} carries no op")
+            if self.kind == "pool":
+                if self.pool_bytes <= 0:
+                    raise ValueError(
+                        f"node {self.id!r}: pool needs a positive byte "
+                        f"count, got {self.pool_bytes}")
+                if len(self.inputs) != 1:
+                    raise ValueError(f"node {self.id!r}: pool takes exactly "
+                                     f"one input, got {len(self.inputs)}")
+            elif len(self.inputs) < 2:
+                raise ValueError(f"node {self.id!r}: add joins >= 2 inputs, "
+                                 f"got {len(self.inputs)}")
+            return
+        entry = registry.get(self.kind)      # raises on unknown kinds
+        if self.op is None:
+            raise ValueError(f"node {self.id!r}: kind {self.kind!r} needs "
+                             f"an op payload")
+        if registry.op_kind(self.op) != entry.kind:
+            raise ValueError(
+                f"node {self.id!r}: op is {registry.op_kind(self.op)!r} "
+                f"but the node kind is {self.kind!r}")
+        if len(self.inputs) > 1:
+            raise ValueError(f"node {self.id!r}: op nodes take at most one "
+                             f"input, got {len(self.inputs)}")
+
+    @property
+    def splittable(self) -> bool:
+        """Whether the partitioner may channel-split this node."""
+        return self.op is not None and registry.get(self.kind).splittable
+
+    def label(self) -> str:
+        if self.kind == "pool":
+            return f"pool {self.pool_bytes}B"
+        if self.kind == "add":
+            return f"add({len(self.inputs)})"
+        return registry.op_label(self.op)
+
+    # -------------------------------------------------------------- codecs
+    def to_json(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"id": self.id, "kind": self.kind,
+                             "inputs": list(self.inputs)}
+        if self.op is not None:
+            d["op"] = registry.op_to_json(self.op)
+        if self.kind == "pool":
+            d["bytes"] = self.pool_bytes
+        return d
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "Node":
+        return Node(id=d["id"], kind=d["kind"],
+                    op=(registry.op_from_json(d["op"])
+                        if d.get("op") is not None else None),
+                    pool_bytes=int(d.get("bytes", 0)),
+                    inputs=tuple(d.get("inputs", ())))
+
+
+class Graph:
+    """A validated, topologically ordered op graph.
+
+    Construction validates the node set (unique ids, known kinds, arity,
+    existing inputs, acyclicity, exactly one output node) and stores the
+    nodes in a deterministic topological order — Kahn's algorithm that
+    always emits the earliest *given* ready node, so a graph built in
+    schedule order keeps that order.  Iteration, planning, and execution
+    all walk `self.nodes` and therefore agree on positions.
+    """
+
+    def __init__(self, nodes: Sequence[Node]):
+        given = list(nodes)
+        if not given:
+            raise ValueError("a graph needs at least one node")
+        by_id: Dict[str, Node] = {}
+        for n in given:
+            if n.id in by_id:
+                raise ValueError(f"duplicate node id {n.id!r}")
+            by_id[n.id] = n
+        consumers: Dict[str, List[str]] = {n.id: [] for n in given}
+        for n in given:
+            for src in n.inputs:
+                if src not in by_id:
+                    raise ValueError(f"node {n.id!r} consumes unknown node "
+                                     f"{src!r}")
+                if src == n.id:
+                    raise ValueError(f"node {n.id!r} consumes itself")
+                consumers[src].append(n.id)
+        outputs = [n.id for n in given if not consumers[n.id]]
+        if len(outputs) != 1:
+            raise ValueError(
+                f"a graph needs exactly one output node (no consumers); "
+                f"got {outputs}")
+        # structural kinds can never be sources: Node arity validation
+        # already guarantees pool/add nodes carry inputs, so every source
+        # is an op node with a declared input shape
+
+        # deterministic Kahn: emit the earliest given ready node
+        emitted: Dict[str, int] = {}
+        order: List[Node] = []
+        while len(order) < len(given):
+            progressed = False
+            for n in given:
+                if n.id in emitted:
+                    continue
+                if all(src in emitted for src in n.inputs):
+                    emitted[n.id] = len(order)
+                    order.append(n)
+                    progressed = True
+            if not progressed:
+                cyclic = sorted(set(by_id) - set(emitted))
+                raise ValueError(f"graph has a cycle through {cyclic}")
+
+        self.nodes: Tuple[Node, ...] = tuple(order)
+        self._by_id = by_id
+        self._consumers = {nid: tuple(c) for nid, c in consumers.items()}
+        self._out_shapes: Dict[str, Tuple[int, ...]] = {}
+
+    # ----------------------------------------------------------- accessors
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __iter__(self) -> Iterator[Node]:
+        return iter(self.nodes)
+
+    def node(self, node_id: str) -> Node:
+        try:
+            return self._by_id[node_id]
+        except KeyError:
+            raise KeyError(f"no node {node_id!r}; "
+                           f"ids: {[n.id for n in self.nodes]}") from None
+
+    def consumers(self, node_id: str) -> Tuple[str, ...]:
+        """Ids of the nodes consuming `node_id`'s output."""
+        self.node(node_id)
+        return self._consumers[node_id]
+
+    def sole_consumer(self, node_id: str) -> Optional[Node]:
+        """The single consumer of a node's output, or None on fan-out /
+        graph output — the gather-elision predicate's first half."""
+        cons = self.consumers(node_id)
+        if len(cons) != 1:
+            return None
+        return self._by_id[cons[0]]
+
+    @property
+    def output(self) -> Node:
+        # every node feeds the unique sink (single-output validation), so
+        # the sink is always last in topological order
+        return self.nodes[-1]
+
+    @property
+    def sources(self) -> Tuple[Node, ...]:
+        return tuple(n for n in self.nodes if not n.inputs)
+
+    def op_nodes(self) -> List[Node]:
+        """Nodes carrying a kernel-registry op, in topological order."""
+        return [n for n in self.nodes if n.op is not None]
+
+    def splittable_nodes(self) -> List[Node]:
+        """The partitioner's domain: channel-splittable op nodes."""
+        return [n for n in self.nodes if n.splittable]
+
+    # ----------------------------------------------------- shape inference
+    def input_shape(self, node_id: str) -> Optional[Tuple[int, ...]]:
+        """Declared input shape of an op node (None for pool/add, whose
+        input is whatever their producers emit)."""
+        n = self.node(node_id)
+        if n.op is None:
+            return None
+        return tuple(registry.get(n.kind).input_shape(n.op))
+
+    def output_shape(self, node_id: str) -> Tuple[int, ...]:
+        """Inferred output shape of a node.  Op nodes declare theirs via
+        the kernel registry; pool recovers its spatial extent from the
+        recorded byte count and the producer's channel count; add emits
+        its producers' (equal) shape."""
+        if node_id in self._out_shapes:
+            return self._out_shapes[node_id]
+        n = self.node(node_id)
+        if n.op is not None:
+            shape = tuple(registry.get(n.kind).output_shape(n.op))
+        elif n.kind == "pool":
+            prev = self.output_shape(n.inputs[0])
+            c_prev = int(prev[-1])
+            edge = pool_out_edge(n.pool_bytes, c_prev)
+            shape = (edge, edge, c_prev)
+        else:                                   # add
+            shapes = {self.output_shape(src) for src in n.inputs}
+            if len(shapes) != 1:
+                raise ValueError(
+                    f"add node {n.id!r} joins mismatched shapes "
+                    f"{sorted(shapes)}")
+            shape = shapes.pop()
+        self._out_shapes[node_id] = shape
+        return shape
+
+    def check_shapes(self) -> None:
+        """Strict edge validation: every op node's declared input shape
+        must equal its producer's inferred output shape.  Legacy unit
+        chains are deliberately *not* held to this (ResNet projection
+        shortcuts re-materialize shapes at runtime); graphs built by
+        `from_model` pass it."""
+        for n in self.nodes:
+            self.output_shape(n.id)             # forces add-join checks
+            declared = self.input_shape(n.id)
+            if declared is None or not n.inputs:
+                continue
+            produced = self.output_shape(n.inputs[0])
+            if tuple(produced) != tuple(declared):
+                raise ValueError(
+                    f"edge {n.inputs[0]!r} -> {n.id!r}: producer emits "
+                    f"{tuple(produced)} but the consumer declares "
+                    f"{tuple(declared)}")
+
+    # --------------------------------------------------------- unit compat
+    def is_unit_chain(self) -> bool:
+        """Whether this graph is exactly a legacy unit list: a linear
+        chain of conv/linear/pool nodes (the pre-IR representable set)."""
+        prev: Optional[Node] = None
+        for n in self.nodes:
+            if n.kind not in ("conv", "linear", "pool"):
+                return False
+            want = () if prev is None else (prev.id,)
+            if n.inputs != want:
+                return False
+            if prev is not None and len(self._consumers[prev.id]) != 1:
+                return False
+            prev = n
+        return True
+
+    def to_units(self) -> List[Unit]:
+        """Lower back to the legacy unit list (unit chains only)."""
+        if not self.is_unit_chain():
+            raise ValueError(
+                "graph is not a legacy unit chain (fan-out, add joins, or "
+                "attention/ssm nodes have no List[Unit] spelling)")
+        return [(n.kind, n.pool_bytes if n.kind == "pool" else n.op)
+                for n in self.nodes]
+
+    # ---------------------------------------------------------- fingerprint
+    def fingerprint(self) -> str:
+        """Content-addressed digest of the graph structure.
+
+        Unit chains reproduce `runtime.plan.network_fingerprint(units)`
+        bit-for-bit — the versioned compatibility rule that keeps every
+        legacy plan-cache entry warm.  Real DAGs canonicalize as
+        ["graph", schema, [[kind, payload, input positions], ...]] with
+        nodes addressed by topological position, so renaming ids never
+        changes the digest.
+        """
+        if self.is_unit_chain():
+            canon: Any = []
+            for n in self.nodes:
+                if n.kind == "pool":
+                    canon.append(["pool", int(n.pool_bytes)])
+                else:
+                    canon.append([n.kind, registry.op_to_json(n.op)])
+        else:
+            pos = {n.id: i for i, n in enumerate(self.nodes)}
+            canon = ["graph", GRAPH_SCHEMA_VERSION,
+                     [[n.kind,
+                       (registry.op_to_json(n.op) if n.op is not None
+                        else int(n.pool_bytes)),
+                       [pos[src] for src in n.inputs]]
+                      for n in self.nodes]]
+        blob = json.dumps(canon, sort_keys=True, separators=(",", ":"))
+        return hashlib.blake2b(blob.encode(), digest_size=12).hexdigest()
+
+    # -------------------------------------------------------------- codecs
+    def to_json(self) -> Dict[str, Any]:
+        return {"schema_version": GRAPH_SCHEMA_VERSION,
+                "nodes": [n.to_json() for n in self.nodes]}
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "Graph":
+        return Graph([Node.from_json(n) for n in d["nodes"]])
+
+    def __repr__(self) -> str:
+        kinds: Dict[str, int] = {}
+        for n in self.nodes:
+            kinds[n.kind] = kinds.get(n.kind, 0) + 1
+        body = ", ".join(f"{k}={v}" for k, v in sorted(kinds.items()))
+        return (f"Graph({len(self.nodes)} nodes: {body}, "
+                f"fingerprint={self.fingerprint()})")
+
+
+def from_units(units: Sequence[Unit]) -> Graph:
+    """Lower a legacy unit list into a linear-chain graph.
+
+    Node ids are canonical positions ("n0", "n1", ...), which is what lets
+    plans over these graphs serialize in the legacy schedule format (and
+    legacy plans reconstruct their graph) with zero ambiguity.
+    """
+    nodes: List[Node] = []
+    prev: Tuple[str, ...] = ()
+    for i, (kind, payload) in enumerate(units):
+        nid = f"n{i}"
+        if kind == "pool":
+            nodes.append(Node(id=nid, kind="pool",
+                              pool_bytes=int(payload), inputs=prev))
+        else:
+            nodes.append(Node(id=nid, kind=kind, op=payload, inputs=prev))
+        prev = (nid,)
+    return Graph(nodes)

@@ -1,10 +1,13 @@
-"""Jitted batched wrapper for the decode-attention kernel."""
+"""Jitted batched wrapper for the decode-attention kernel, plus the
+registry lowering that lets graph-IR "attention" nodes execute through the
+shared `(x, w, op)` unit contract (see kernels/registry.py)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
@@ -23,3 +26,32 @@ def decode_attention_op(q, k, v, pos, *, window: int = 0, bs: int = 512,
     fn = functools.partial(decode_attention, window=window, bs=bs,
                            interpret=interpret)
     return jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, pos))(q, k, v)
+
+
+# ------------------------------------------------- registry unit lowering
+
+def _unit_attention(x, w, op, *, use_kernel: bool, interpret: bool = False):
+    """`(x, w, op)` unit contract of an AttnOp node: `x` is the flattened
+    (1, H*hd) query block, `w` the stacked (2, S, KV, hd) KV cache."""
+    q = x.reshape(op.H, op.hd)
+    k, v = w[0], w[1]
+    pos = op.S - 1                   # attend to the whole recorded cache
+    if use_kernel:
+        out = decode_attention_op(q[None], k[None], v[None], pos,
+                                  window=op.window, bs=min(512, op.S),
+                                  interpret=interpret)[0]
+    else:
+        out = decode_attention_ref(q, k, v, pos, window=op.window)
+    return out.reshape(1, op.H * op.hd)
+
+
+def attention_unit_pallas(x, w, op, *, interpret: bool = False):
+    return _unit_attention(x, w, op, use_kernel=True, interpret=interpret)
+
+
+def attention_unit_oracle(x, w, op):
+    return _unit_attention(x, w, op, use_kernel=False)
+
+
+registry.register_lowering("attention", pallas=attention_unit_pallas,
+                           oracle=attention_unit_oracle)

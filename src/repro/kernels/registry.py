@@ -28,7 +28,7 @@ from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.types import ConvOp, LinearOp, Op
+from repro.core.types import AttnOp, ConvOp, LinearOp, Op, SSMOp
 
 # ------------------------------------------------------------------ kinds
 
@@ -36,16 +36,21 @@ from repro.core.types import ConvOp, LinearOp, Op
 _LOWERING_MODULES = {
     "linear": "repro.kernels.split_matmul.ops",
     "conv": "repro.kernels.winograd_conv.ops",
+    "attention": "repro.kernels.decode_attention.ops",
+    "ssm": "repro.kernels.ssd_chunk.ops",
 }
+
+_KIND_BY_TYPE = {LinearOp: "linear", ConvOp: "conv",
+                 AttnOp: "attention", SSMOp: "ssm"}
 
 
 def op_kind(op: Op) -> str:
     """The registry kind of an op — the one isinstance check in the repo."""
-    if isinstance(op, LinearOp):
-        return "linear"
-    if isinstance(op, ConvOp):
-        return "conv"
-    raise TypeError(f"unregistered op type {type(op).__name__}")
+    try:
+        return _KIND_BY_TYPE[type(op)]
+    except KeyError:
+        raise TypeError(f"unregistered op type {type(op).__name__}") \
+            from None
 
 
 # ------------------------------------------------------------- op codecs
@@ -54,11 +59,17 @@ def op_to_json(op: Op) -> Dict[str, Any]:
     """JSON codec of an op, keyed by registry kind.  Lives here (not in
     runtime/plan.py, which re-exports it) so every layer that serializes
     ops — plan schedules, measurement records — shares one leaf encoding."""
-    if op_kind(op) == "linear":
+    kind = op_kind(op)
+    if kind == "linear":
         return {"kind": "linear", "L": op.L, "C_in": op.C_in,
                 "C_out": op.C_out}
-    return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
-            "C_in": op.C_in, "C_out": op.C_out, "K": op.K, "S": op.S}
+    if kind == "conv":
+        return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
+                "C_in": op.C_in, "C_out": op.C_out, "K": op.K, "S": op.S}
+    if kind == "attention":
+        return {"kind": "attention", "H": op.H, "S": op.S, "KV": op.KV,
+                "hd": op.hd, "window": op.window}
+    return {"kind": "ssm", "T": op.T, "H": op.H, "hd": op.hd, "N": op.N}
 
 
 def op_from_json(d: Dict[str, Any]) -> Op:
@@ -67,16 +78,27 @@ def op_from_json(d: Dict[str, Any]) -> Op:
     if d["kind"] == "conv":
         return ConvOp(H_in=d["H_in"], W_in=d["W_in"], C_in=d["C_in"],
                       C_out=d["C_out"], K=d["K"], S=d["S"])
+    if d["kind"] == "attention":
+        return AttnOp(H=d["H"], S=d["S"], KV=d["KV"], hd=d["hd"],
+                      window=d.get("window", 0))
+    if d["kind"] == "ssm":
+        return SSMOp(T=d["T"], H=d["H"], hd=d["hd"], N=d["N"])
     raise ValueError(f"unknown op kind {d['kind']!r}")
 
 
 def op_label(op: Op) -> str:
     """Human-readable label of an op — the one format shared by plan
     explain tables, executor timings, and measurement records."""
-    if op_kind(op) == "linear":
+    kind = op_kind(op)
+    if kind == "linear":
         return f"linear {op.L}x{op.C_in}->{op.C_out}"
-    return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
-            f"K{op.K} S{op.S}")
+    if kind == "conv":
+        return (f"conv {op.H_in}x{op.W_in}x{op.C_in}->{op.C_out} "
+                f"K{op.K} S{op.S}")
+    if kind == "attention":
+        win = f" W{op.window}" if op.window else ""
+        return f"attention H{op.H}/kv{op.KV} hd{op.hd} S{op.S}{win}"
+    return f"ssm T{op.T} H{op.H} hd{op.hd} N{op.N}"
 
 
 # ------------------------------------------------------- shape contracts
@@ -115,10 +137,50 @@ def _conv_base_features(op: ConvOp) -> List[float]:
             math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
 
 
+def _attn_input_shape(op: AttnOp) -> Tuple[int, ...]:
+    return (1, op.H * op.hd)
+
+
+def _attn_weight_shape(op: AttnOp) -> Tuple[int, ...]:
+    return (2, op.S, op.KV, op.hd)                   # stacked K/V cache
+
+
+def _attn_output_shape(op: AttnOp) -> Tuple[int, ...]:
+    return (1, op.H * op.hd)
+
+
+def _attn_base_features(op: AttnOp) -> List[float]:
+    return [op.H, op.S, op.KV, op.hd, op.window,
+            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
+
+
+def _ssm_input_shape(op: SSMOp) -> Tuple[int, ...]:
+    return (op.T, op.H * op.hd)
+
+
+def _ssm_weight_shape(op: SSMOp) -> Tuple[int, ...]:
+    # flat parameter vector: b, c (T, N) each + dt (T, H) + a (H,) +
+    # state0 (H, hd, N); the lowering unpacks (see kernels/ssd_chunk/ops.py)
+    return (2 * op.T * op.N + op.T * op.H + op.H + op.H * op.hd * op.N,)
+
+
+def _ssm_output_shape(op: SSMOp) -> Tuple[int, ...]:
+    return (op.T, op.H * op.hd)
+
+
+def _ssm_base_features(op: SSMOp) -> List[float]:
+    return [op.T, op.H, op.hd, op.N,
+            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
+
+
 def _fan_in(op: Op) -> int:
     if isinstance(op, LinearOp):
         return op.C_in
-    return op.K * op.K * op.C_in
+    if isinstance(op, ConvOp):
+        return op.K * op.K * op.C_in
+    if isinstance(op, AttnOp):
+        return op.hd                    # keeps qk scores O(1) pre-softmax
+    return op.N
 
 
 # --------------------------------------------------------------- entries
@@ -145,6 +207,10 @@ class KernelEntry:
     weight_shape: Callable[[Op], Tuple[int, ...]]
     output_shape: Callable[[Op], Tuple[int, ...]]
     base_features: Callable[[Op], List[float]]
+    #: whether the partitioner may split the op's output channels across
+    #: CPU and GPU (the paper's conv/linear domain); non-splittable kinds
+    #: (attention, ssm) are scheduled exclusively and charged analytically
+    splittable: bool = True
 
     def init_weight(self, op: Op, rng: np.random.Generator) -> np.ndarray:
         """Seeded fan-in-scaled weights (keeps deep chains O(1) magnitude,
@@ -173,6 +239,22 @@ _ENTRIES: Dict[str, KernelEntry] = {
         output_shape=_conv_output_shape,
         base_features=_conv_base_features,
     ),
+    "attention": KernelEntry(
+        kind="attention",
+        input_shape=_attn_input_shape,
+        weight_shape=_attn_weight_shape,
+        output_shape=_attn_output_shape,
+        base_features=_attn_base_features,
+        splittable=False,
+    ),
+    "ssm": KernelEntry(
+        kind="ssm",
+        input_shape=_ssm_input_shape,
+        weight_shape=_ssm_weight_shape,
+        output_shape=_ssm_output_shape,
+        base_features=_ssm_base_features,
+        splittable=False,
+    ),
 }
 
 _LOWERINGS: Dict[str, KernelLowering] = {}
@@ -192,6 +274,11 @@ def get(kind: str) -> KernelEntry:
 
 def entry_for(op: Op) -> KernelEntry:
     return get(op_kind(op))
+
+
+def is_splittable(op: Op) -> bool:
+    """Whether the partitioner may channel-split this op (see KernelEntry)."""
+    return entry_for(op).splittable
 
 
 def register_lowering(kind: str, *, pallas: Callable, oracle: Callable

@@ -1,10 +1,14 @@
-"""Jitted wrapper for the chunked-SSD Pallas kernel."""
+"""Jitted wrapper for the chunked-SSD Pallas kernel, plus the registry
+lowering that lets graph-IR "ssm" nodes execute through the shared
+`(x, w, op)` unit contract (see kernels/registry.py)."""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.ssd_chunk.ref import ssd_scan_ref
 from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_scan
 
@@ -17,3 +21,48 @@ def ssd_chunk_op(x, b, c, dt, a, state0, *, chunk: int = 256,
         return ssd_scan_ref(x, b, c, dt, a, state0)
     return ssd_chunk_scan(x, b, c, dt, a, state0, chunk=chunk,
                           interpret=interpret)
+
+
+# ------------------------------------------------- registry unit lowering
+
+def _unpack_params(w, op):
+    """Slice the flat parameter vector of an SSMOp into the scan operands,
+    applying the stabilizing transforms (dt bounded positive, a strictly
+    negative) so a generically-initialized node never overflows the decay
+    exp(dt * a).  Shared by the Pallas path and the oracle, so the two
+    stay elementwise comparable."""
+    t, h, hd, n = op.T, op.H, op.hd, op.N
+    sizes = [t * n, t * n, t * h, h, h * hd * n]
+    parts, lo = [], 0
+    for s in sizes:
+        parts.append(w[lo:lo + s])
+        lo += s
+    b = parts[0].reshape(1, t, n)
+    c = parts[1].reshape(1, t, n)
+    dt = 0.05 + 0.2 * jax.nn.sigmoid(parts[2].reshape(1, t, h))
+    a = -(0.1 + jnp.abs(parts[3]))
+    state0 = parts[4].reshape(1, h, hd, n)
+    return b, c, dt, a, state0
+
+
+def _unit_ssm(x, w, op, *, use_kernel: bool, interpret: bool = False):
+    """`(x, w, op)` unit contract of an SSMOp node: `x` is the (T, H*hd)
+    inner-projected token block, `w` the flat B/C/dt/a/state0 vector."""
+    xb = x.reshape(1, op.T, op.H, op.hd)
+    b, c, dt, a, state0 = _unpack_params(w, op)
+    _, y = ssd_chunk_op(xb, b, c, dt, a, state0,
+                        chunk=min(256, op.T), interpret=interpret,
+                        use_kernel=use_kernel)
+    return y.reshape(op.T, op.H * op.hd)
+
+
+def ssm_unit_pallas(x, w, op, *, interpret: bool = False):
+    return _unit_ssm(x, w, op, use_kernel=True, interpret=interpret)
+
+
+def ssm_unit_oracle(x, w, op):
+    return _unit_ssm(x, w, op, use_kernel=False)
+
+
+registry.register_lowering("ssm", pallas=ssm_unit_pallas,
+                           oracle=ssm_unit_oracle)

@@ -47,6 +47,7 @@ SOURCE_SIMULATOR = "simulator"    # analytic device-model measurement
 MODE_COEXEC = "coexec"
 MODE_EXCLUSIVE = "exclusive"
 MODE_POOL = "pool"
+MODE_ADD = "add"                  # residual join of a graph plan
 MODE_SIMULATED = "simulated"
 
 
@@ -60,9 +61,10 @@ class MeasurementRecord:
     """
 
     index: int                   # schedule position (or batch index)
-    unit: str                    # registry op kind: "conv"|"linear"|"pool"
+    unit: str                    # registry op kind ("conv"|"linear"|
+                                 # "attention"|"ssm") or "pool"|"add"
     label: str
-    mode: str                    # coexec | exclusive | pool | simulated
+    mode: str                    # coexec | exclusive | pool | add | simulated
     c_fast: int                  # GPU-analogue channel share (0 = unsplit)
     c_slow: int                  # CPU-analogue channel share
     chained_input: bool          # consumed the producer's group-local stack
@@ -76,6 +78,7 @@ class MeasurementRecord:
     host: str = ""               # platform.node() of the measuring host
     plan_key: str = ""           # PlanProvenance digest (the store key)
     network_fingerprint: str = ""
+    node_id: str = ""            # graph node id ("" for bare-op records)
     schema_version: int = MEASUREMENT_SCHEMA_VERSION
 
     def features(self) -> Optional[List[float]]:

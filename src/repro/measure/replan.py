@@ -24,7 +24,7 @@ from repro.core.partitioner import PartitionDecision
 from repro.core.sync import SyncMechanism, sync_overhead_us
 from repro.measure.calibrate import Calibrator
 from repro.runtime.cache import (PlanCache, partition_ops_plan_cached,
-                                 plan_network_cached)
+                                 plan_graph_cached)
 from repro.runtime.plan import PLANNER_PREDICTOR, CoexecPlan, op_label
 
 
@@ -57,6 +57,7 @@ class DecisionChange:
     new_c_gpu: int
     old_pred_us: float           # calibrated score of the old split
     new_pred_us: float           # calibrated score of the new split
+    node_id: str = ""            # graph node id of the changed op
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -95,8 +96,9 @@ class PlanDiff:
         lines = [head,
                  f"  key {self.old_key} -> {self.new_key}"]
         for c in self.changes:
+            tag = c.node_id or str(c.index)
             lines.append(
-                f"  [{c.index:>3}] {c.label:<42} cpu/gpu "
+                f"  [{tag:>3}] {c.label:<42} cpu/gpu "
                 f"{c.old_c_cpu}/{c.old_c_gpu} -> "
                 f"{c.new_c_cpu}/{c.new_c_gpu} "
                 f"(pred {c.old_pred_us:.1f} -> {c.new_pred_us:.1f} us)")
@@ -120,8 +122,8 @@ def diff_plans(old: CoexecPlan, new: CoexecPlan, cpu_pred, gpu_pred, *,
                              mechanism=mechanism)
     changes: List[DecisionChange] = []
     op_i = 0
-    for idx, entry in enumerate(old.schedule):
-        if entry["unit"] == "pool":
+    for idx, (nid, entry) in enumerate(zip(old.node_ids(), old.schedule)):
+        if "decision" not in entry:      # pool/add/attention/ssm: unsplit
             continue
         o, n = old_dec[op_i], new_dec[op_i]
         if (o.c_cpu, o.c_gpu) != (n.c_cpu, n.c_gpu):
@@ -130,7 +132,8 @@ def diff_plans(old: CoexecPlan, new: CoexecPlan, cpu_pred, gpu_pred, *,
                 old_c_cpu=o.c_cpu, old_c_gpu=o.c_gpu,
                 new_c_cpu=n.c_cpu, new_c_gpu=n.c_gpu,
                 old_pred_us=float(old_us[op_i]),
-                new_pred_us=float(new_us[op_i])))
+                new_pred_us=float(new_us[op_i]),
+                node_id=nid))
         op_i += 1
     return PlanDiff(old_key=old.key, new_key=new.key,
                     calibration=calibration, n_ops=len(old_dec),
@@ -144,11 +147,12 @@ def replan(plan: CoexecPlan, cpu_pred, gpu_pred, calibrator: Calibrator, *,
     """Re-run the cached planner that produced `plan` with calibrated
     predictors; returns (new_plan, diff).
 
-    The plan's own provenance selects the planning path: network plans
-    (threads > 0 or pool units) go through `plan_network_cached`, bare-op
-    plans through `partition_ops_plan_cached` — same mechanism, step and
-    seed as the original, so the *only* provenance deltas are the
-    calibration version (and any decision changes it causes).
+    The plan's own provenance selects the planning path: network/graph
+    plans (threads > 0, pool units, or a non-chain graph) go through
+    `plan_graph_cached` over the plan's own graph, bare-op plans through
+    `partition_ops_plan_cached` — same mechanism, step and seed as the
+    original, so the *only* provenance deltas are the calibration version
+    (and any decision changes it causes).
     """
     prov = plan.provenance
     if prov.planner != PLANNER_PREDICTOR:
@@ -158,14 +162,15 @@ def replan(plan: CoexecPlan, cpu_pred, gpu_pred, calibrator: Calibrator, *,
     cp = calibrator.wrap(cpu_pred)
     gp = calibrator.wrap(gpu_pred)
     mech = SyncMechanism(prov.mechanism)
-    units = plan.units
-    has_pool = any(kind == "pool" for kind, _ in units)
-    if prov.threads > 0 or has_pool:
-        new = plan_network_cached(units, cp, gp, threads=prov.threads,
-                                  mechanism=mech, step=prov.step,
-                                  seed=prov.seed, cache=cache)
+    graph = plan.graph_ir()
+    is_chain = graph.is_unit_chain()
+    has_pool = any(n.kind == "pool" for n in graph)
+    if not is_chain or prov.threads > 0 or has_pool:
+        new = plan_graph_cached(graph, cp, gp, threads=prov.threads,
+                                mechanism=mech, step=prov.step,
+                                seed=prov.seed, cache=cache)
     else:
-        new = partition_ops_plan_cached([p for _, p in units], cp, gp,
+        new = partition_ops_plan_cached([n.op for n in graph], cp, gp,
                                         mechanism=mech, step=prov.step,
                                         cache=cache)
     diff = diff_plans(plan, new, cp, gp, mechanism=mech,

@@ -19,19 +19,23 @@ import importlib
 _EXPORTS = {
     "PlanCache": "repro.runtime.cache",
     "grid_partition_ops_cached": "repro.runtime.cache",
+    "grid_plan_graph_cached": "repro.runtime.cache",
     "grid_plan_network_cached": "repro.runtime.cache",
     "partition_ops_cached": "repro.runtime.cache",
     "partition_ops_plan_cached": "repro.runtime.cache",
+    "plan_graph_cached": "repro.runtime.cache",
     "plan_network_cached": "repro.runtime.cache",
     "PLAN_SCHEMA_VERSION": "repro.runtime.plan",
     "CoexecPlan": "repro.runtime.plan",
     "ExecSpec": "repro.runtime.plan",
     "PlanProvenance": "repro.runtime.plan",
+    "build_graph_schedule": "repro.runtime.plan",
     "calibration_version": "repro.runtime.plan",
     "decision_from_json": "repro.runtime.plan",
     "decision_to_json": "repro.runtime.plan",
     "decision_to_spec": "repro.runtime.plan",
     "network_fingerprint": "repro.runtime.plan",
+    "plan_from_graph_report": "repro.runtime.plan",
     "op_from_json": "repro.runtime.plan",
     "op_to_json": "repro.runtime.plan",
     "plan_from_report": "repro.runtime.plan",

@@ -6,6 +6,13 @@ cache *before* touching the predictors or the simulator, so a warm hit
 performs zero `LatencyPredictor.predict` and zero `measure_latency_us`
 calls — repeated planning of the same (network, device, mechanism, threads,
 predictors) tuple costs one JSON read.
+
+`plan_graph_cached` / `grid_plan_graph_cached` are the graph-IR entry
+points; the unit-list spellings (`plan_network_cached`,
+`grid_plan_network_cached`) are thin lowering shims over them via
+`graph.from_units` — provenance-identical to the pre-IR implementations
+(chain graphs fingerprint to the legacy unit-list digest), so existing
+on-disk caches stay warm across the representation change.
 """
 from __future__ import annotations
 
@@ -13,16 +20,15 @@ from pathlib import Path
 from typing import List, Optional, Sequence
 
 from repro.core.networks import Unit
-from repro.core.partitioner import (PartitionDecision,
-                                    grid_search_partition_batch,
-                                    optimal_partition_batch)
-from repro.core.planner import plan_network
+from repro.core.partitioner import PartitionDecision, optimal_partition_batch
+from repro.core.planner import grid_plan_graph, plan_graph
 from repro.core.sync import SyncMechanism
 from repro.core.types import Op
+from repro.graph.ir import Graph, from_units
 from repro.runtime.plan import (PLANNER_GRID, PLANNER_PREDICTOR,
                                 CoexecPlan, PlanProvenance, build_schedule,
                                 calibration_version, network_fingerprint,
-                                plan_from_report, predictor_checksum)
+                                plan_from_graph_report, predictor_checksum)
 
 
 class PlanCache:
@@ -65,37 +71,52 @@ class PlanCache:
         return sorted(p.stem for p in self.root.glob("*.json"))
 
 
-def plan_network_cached(units: Sequence[Unit], cpu_pred, gpu_pred, *,
-                        threads: int,
-                        mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
-                        step: int = 8, seed: int = 1,
-                        cache: PlanCache) -> CoexecPlan:
-    """End-to-end network planning through the cache.
+def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
+                      threads: int,
+                      mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                      step: int = 8, seed: int = 1,
+                      cache: PlanCache) -> CoexecPlan:
+    """End-to-end graph planning through the cache.
 
-    Provenance (and therefore the cache key) covers the network graph, the
-    target (device, threads), the sync mechanism, the candidate-grid step,
-    the measurement seed, a structural checksum of both predictors, and —
-    when the predictors are calibrated (`repro.measure.Calibrator.wrap`) —
-    the calibration version, so refit calibrators never alias stale plans.
+    Provenance (and therefore the cache key) covers the graph's
+    content-addressed fingerprint, the target (device, threads), the sync
+    mechanism, the candidate-grid step, the measurement seed, a structural
+    checksum of both predictors, and — when the predictors are calibrated
+    (`repro.measure.Calibrator.wrap`) — the calibration version, so refit
+    calibrators never alias stale plans.
     """
     prov = PlanProvenance(
         device=gpu_pred.device, threads=threads, mechanism=mechanism.value,
         step=step, seed=seed,
-        network_fingerprint=network_fingerprint(units),
+        network_fingerprint=graph.fingerprint(),
         predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
         planner=PLANNER_PREDICTOR,
         calibration=calibration_version(cpu_pred, gpu_pred))
     hit = cache.get(prov)
     if hit is not None:
         return hit
-    report = plan_network(units, cpu_pred, gpu_pred, threads=threads,
-                          mechanism=mechanism, step=step, seed=seed)
-    plan = plan_from_report(units, report, mechanism=mechanism, step=step,
-                            seed=seed,
-                            pred_checksum=prov.predictor_checksum,
-                            calibration=prov.calibration)
+    report = plan_graph(graph, cpu_pred, gpu_pred, threads=threads,
+                        mechanism=mechanism, step=step, seed=seed)
+    plan = plan_from_graph_report(graph, report, mechanism=mechanism,
+                                  step=step, seed=seed,
+                                  pred_checksum=prov.predictor_checksum,
+                                  calibration=prov.calibration)
     cache.put(plan)
     return plan
+
+
+def plan_network_cached(units: Sequence[Unit], cpu_pred, gpu_pred, *,
+                        threads: int,
+                        mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
+                        step: int = 8, seed: int = 1,
+                        cache: PlanCache) -> CoexecPlan:
+    """Legacy unit-list spelling: lowers through `graph.from_units` into
+    `plan_graph_cached`.  Chain graphs fingerprint identically to the old
+    unit-list digest and their schedules serialize in the pre-IR format,
+    so cache entries (keys *and* file bytes) are unchanged."""
+    return plan_graph_cached(from_units(units), cpu_pred, gpu_pred,
+                             threads=threads, mechanism=mechanism,
+                             step=step, seed=seed, cache=cache)
 
 
 def _ops_as_units(ops: Sequence[Op]) -> List[Unit]:
@@ -147,31 +168,42 @@ def partition_ops_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
                                      cache=cache).decisions
 
 
+def grid_plan_graph_cached(graph: Graph, device: str, threads: int, *,
+                           mechanism: SyncMechanism =
+                           SyncMechanism.SVM_POLL,
+                           step: int = 8, seed: int = 0,
+                           cache: PlanCache) -> CoexecPlan:
+    """Measurement-driven (oracle) planning of a graph through the cache;
+    keyed by planner="grid" with no predictor checksum (none is involved).
+    Pool/add nodes pass through unsplit; attention/ssm nodes are charged
+    analytically (the grid oracle has no measurement model for them)."""
+    prov = PlanProvenance(
+        device=device, threads=threads, mechanism=mechanism.value,
+        step=step, seed=seed, network_fingerprint=graph.fingerprint(),
+        predictor_checksum="", planner=PLANNER_GRID)
+    hit = cache.get(prov)
+    if hit is not None:
+        return hit
+    report = grid_plan_graph(graph, device, threads, mechanism=mechanism,
+                             step=step, seed=seed)
+    plan = plan_from_graph_report(graph, report, mechanism=mechanism,
+                                  step=step, seed=seed, pred_checksum="",
+                                  planner=PLANNER_GRID, with_totals=False)
+    cache.put(plan)
+    return plan
+
+
 def grid_plan_network_cached(units: Sequence[Unit], device: str,
                              threads: int, *,
                              mechanism: SyncMechanism =
                              SyncMechanism.SVM_POLL,
                              step: int = 8, seed: int = 0,
                              cache: PlanCache) -> CoexecPlan:
-    """Measurement-driven (oracle) planning of a unit list through the
-    cache; keyed by planner="grid" with no predictor checksum (none is
-    involved).  Pool units pass through into the schedule unsplit."""
-    units = list(units)
-    prov = PlanProvenance(
-        device=device, threads=threads, mechanism=mechanism.value,
-        step=step, seed=seed, network_fingerprint=network_fingerprint(units),
-        predictor_checksum="", planner=PLANNER_GRID)
-    hit = cache.get(prov)
-    if hit is not None:
-        return hit
-    ops = [payload for kind, payload in units if kind != "pool"]
-    decisions = grid_search_partition_batch(ops, device, threads,
-                                            mechanism=mechanism, step=step,
-                                            seed=seed)
-    plan = CoexecPlan(provenance=prov,
-                      schedule=build_schedule(units, decisions))
-    cache.put(plan)
-    return plan
+    """Legacy unit-list spelling of `grid_plan_graph_cached` (lowers via
+    `graph.from_units`; provenance and file bytes unchanged)."""
+    return grid_plan_graph_cached(from_units(units), device, threads,
+                                  mechanism=mechanism, step=step,
+                                  seed=seed, cache=cache)
 
 
 def grid_partition_ops_cached(ops: Sequence[Op], device: str, threads: int, *,

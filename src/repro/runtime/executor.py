@@ -2,35 +2,41 @@
 graph.
 
 PR 1 made partitioning a compile-once artifact; this module closes the
-plan->execution gap.  `PlanExecutor` walks a plan's schedule and lowers
-every entry to actual computation on the co-execution mesh:
+plan->execution gap.  `PlanExecutor` walks the plan's op graph
+(`repro.graph`) in topological order and lowers every node to actual
+computation on the co-execution mesh:
 
-  * **co-executed** conv/linear units run channel-split across the two
+  * **co-executed** conv/linear nodes run channel-split across the two
     device groups (`core/coexec.coexec_matmul` / `coexec_conv2d`), with the
     split taken verbatim from the plan's `PartitionDecision` (GPU share ->
     fast group) and re-aligned to the mesh (`split_for_mesh`);
-  * consecutive co-executed units whose shapes chain keep their outputs
-    **group-local** (`gather=False`) — the consumer reconstructs its input
-    inside its own shard_map program, eliding the explicit reshard between
-    the ops.  This is the TPU analogue of the paper's fine-grained SVM:
-    "subsequent CPU and GPU operations read the shared output directly".
-    An explicit reshard (`gather_stacked`) happens only at true boundaries:
-    pool units, exclusive units, shape-adapting transitions, and the final
-    output;
-  * **exclusive** units (all channels on one side) and every unit on a
-    degraded single-group mesh run unsplit through the shared kernel
-    registry — jnp oracle by default, Pallas kernels with `use_pallas=True`;
-  * **pool** units lower to max/global-average pooling on the materialized
-    activation (pooling always runs GPU-side in the paper: no sync point).
+  * gather-elision is a *graph property*: a split node's output stays
+    **group-local** (`gather=False`) iff its **sole consumer** is a
+    compatible split node — the consumer reconstructs its input inside its
+    own shard_map program, eliding the explicit reshard.  This is the TPU
+    analogue of the paper's fine-grained SVM: "subsequent CPU and GPU
+    operations read the shared output directly".  An explicit reshard
+    (`gather_stacked`) happens only at true boundaries: pool/add nodes,
+    exclusive nodes, shape-adapting transitions, fan-out, and the final
+    output — and a **fanned-out** split output is gathered exactly once
+    (the materialized activation is written back for the remaining
+    consumers);
+  * **exclusive** nodes (all channels on one side), attention/ssm nodes
+    (never split), and every node on a degraded single-group mesh run
+    unsplit through the shared kernel registry — jnp oracle by default,
+    Pallas kernels with `use_pallas=True`;
+  * **pool** nodes lower to max/global-average pooling on the materialized
+    activation (pooling always runs GPU-side in the paper: no sync point);
+  * **add** nodes materialize their producers and sum them — the residual
+    joins of decoder-block graphs.
 
-The unit list is a flat latency schedule, not a full dataflow DAG (residual
-adds are not modeled); where a unit's declared input shape disagrees with
-the producing activation (ResNet projection shortcuts), the executor
-re-materializes the declared shape deterministically (tile + crop), and the
-unsplit oracle (`run_oracle`) applies the identical adaptation — so
-executed plans are testable against the oracle end to end.
+Where an op node's declared input shape disagrees with the producing
+activation (ResNet projection shortcuts in the legacy unit chains), the
+executor re-materializes the declared shape deterministically (tile +
+crop), and the unsplit oracle (`run_oracle`) applies the identical
+adaptation — so executed plans are testable against the oracle end to end.
 
-Every unit execution is timed into a `repro.measure.MeasurementRecord` —
+Every node execution is timed into a `repro.measure.MeasurementRecord` —
 the one schema shared with the simulator and the predictor training sets —
 and the resulting `ExecutionReport` pairs executed wall time with the
 plan's predicted latency per op (what `MeasurementStore`/`Calibrator`
@@ -53,7 +59,8 @@ import numpy as np
 from repro.core.coexec import (SplitPlan, coexec_conv2d, coexec_matmul,
                                coexec_mesh, gather_stacked, mesh_groups,
                                pack_weights, split_for_mesh)
-from repro.core.networks import Unit, pool_out_edge, unit_input_shape
+from repro.core.networks import Unit, pool_out_edge
+from repro.graph.ir import Graph
 from repro.kernels import registry
 from repro.measure.record import (SOURCE_EXECUTOR, MeasurementRecord,
                                   usable_for_fidelity)
@@ -193,14 +200,23 @@ class PlanExecutor:
                  use_pallas: bool = False, interpret: bool = False):
         self.plan = plan
         self.specs = plan.exec_specs()
-        units = plan.units if units is None else list(units)
-        fp = network_fingerprint(units)
+        if units is not None:
+            fp = network_fingerprint(list(units))
+            if fp != plan.provenance.network_fingerprint:
+                raise ValueError(
+                    "units do not match the plan's network fingerprint "
+                    f"({fp} != {plan.provenance.network_fingerprint}); "
+                    "the plan was compiled for a different graph")
+        self.graph: Graph = plan.graph_ir()
+        fp = self.graph.fingerprint()
         if fp != plan.provenance.network_fingerprint:
             raise ValueError(
-                "units do not match the plan's network fingerprint "
+                "graph does not match the plan's network fingerprint "
                 f"({fp} != {plan.provenance.network_fingerprint}); "
                 "the plan was compiled for a different graph")
-        self.units = units
+        if [n.kind for n in self.graph] != [s.unit for s in self.specs]:
+            raise ValueError("plan schedule and graph disagree on node "
+                             "kinds — corrupt plan")
         self.mesh = coexec_mesh() if mesh is None else mesh
         self.split_capable = mesh_groups(self.mesh) == 2
         self.dtype = dtype
@@ -212,7 +228,7 @@ class PlanExecutor:
         rng = np.random.default_rng(seed)
         self.params: List[Optional[jax.Array]] = []
         for spec in self.specs:
-            if spec.unit == "pool":
+            if spec.op is None:
                 self.params.append(None)
             else:
                 w = registry.get(spec.unit).init_weight(spec.op, rng)
@@ -229,21 +245,23 @@ class PlanExecutor:
                 self._splits.append(None)
         self._input_seed = seed + 1
 
+    @property
+    def units(self) -> List[Unit]:
+        """Legacy unit-list view (chain plans only; see plan.units)."""
+        return self.plan.units
+
     # ------------------------------------------------------------- inputs
     def input_template(self) -> jax.Array:
-        """A seeded input matching the first conv/linear unit's shape
+        """A seeded input matching the first source node's declared shape
         (deterministic: every call returns the same values, so `run` and
         `run_oracle` with x=None see identical inputs)."""
-        for spec in self.specs:
-            if spec.unit == "pool":
-                continue
-            shape = unit_input_shape((spec.unit, spec.op))
-            if spec.unit == "conv":
-                shape = (1,) + tuple(shape)
-            rng = np.random.default_rng(self._input_seed)
-            x = rng.standard_normal(shape).astype(np.float32)
-            return jnp.asarray(x, self.dtype)
-        raise ValueError("plan has no conv/linear units to execute")
+        src = self.graph.sources[0]
+        shape = tuple(registry.get(src.kind).input_shape(src.op))
+        if src.kind == "conv":
+            shape = (1,) + shape
+        rng = np.random.default_rng(self._input_seed)
+        x = rng.standard_normal(shape).astype(np.float32)
+        return jnp.asarray(x, self.dtype)
 
     # -------------------------------------------------------- elementaries
     def _materialize(self, act: _Act) -> Tuple[jax.Array, int]:
@@ -254,18 +272,20 @@ class PlanExecutor:
         return act, 0
 
     def _adapt(self, x: jax.Array, spec: ExecSpec) -> jax.Array:
-        """Re-materialize a plain activation to the unit's declared input
+        """Re-materialize a plain activation to the node's declared input
         shape (identity when shapes already chain)."""
         op = spec.op
-        if spec.unit == "linear":
-            flat = x.reshape(-1)
-            flat = _fit_axis(flat, 0, op.L * op.C_in)
-            return flat.reshape(op.L, op.C_in)
-        if x.ndim == 2:                       # linear -> conv (not in the
-            x = x.reshape(1, 1, *x.shape)     # paper's nets, but total)
-        x = _fit_axis(x, 1, op.H_in)
-        x = _fit_axis(x, 2, op.W_in)
-        return _fit_axis(x, 3, op.C_in)
+        if spec.unit == "conv":
+            if x.ndim == 2:                   # linear -> conv (not in the
+                x = x.reshape(1, 1, *x.shape)  # paper's nets, but total)
+            x = _fit_axis(x, 1, op.H_in)
+            x = _fit_axis(x, 2, op.W_in)
+            return _fit_axis(x, 3, op.C_in)
+        # 2D (rows, channels) contracts: linear, attention, ssm
+        shape = tuple(registry.get(spec.unit).input_shape(op))
+        flat = x.reshape(-1)
+        flat = _fit_axis(flat, 0, int(np.prod(shape)))
+        return flat.reshape(shape)
 
     def _pool(self, x: jax.Array, pool_bytes: int) -> jax.Array:
         """Lower a pool unit: global average pool when the recorded output
@@ -329,33 +349,64 @@ class PlanExecutor:
 
     def _execute(self, x: Optional[jax.Array] = None, *, chain: bool = True
                  ) -> Tuple[jax.Array, ExecutionReport]:
-        act: _Act = (self.input_template() if x is None
-                     else jnp.asarray(x, self.dtype))
+        x0: jax.Array = (self.input_template() if x is None
+                         else jnp.asarray(x, self.dtype))
+        acts: Dict[str, _Act] = {}
+        remaining = {n.id: len(self.graph.consumers(n.id))
+                     for n in self.graph}
         timings: List[MeasurementRecord] = []
         reshard = elided = 0
         host = platform.node()
         prov = self.plan.provenance
-        for i, (spec, w) in enumerate(zip(self.specs, self.params)):
-            t0 = time.perf_counter()
-            chained = False
-            mode = "pool"
-            if spec.unit == "pool":
+
+        def materialized(src: Optional[str]) -> jax.Array:
+            """The plain (gathered) activation of a producer.  A stacked
+            output is gathered ONCE and written back, so fan-out costs a
+            single reshard no matter how many consumers follow."""
+            nonlocal reshard
+            if src is None:
+                return x0
+            act = acts[src]
+            if isinstance(act, _Stacked):
                 act, r = self._materialize(act)
                 reshard += r
-                act = self._pool(act, spec.pool_bytes)
+                acts[src] = act
+            return act
+
+        for i, (node, spec) in enumerate(zip(self.graph, self.specs)):
+            w = self.params[i]
+            src = node.inputs[0] if node.inputs else None
+            t0 = time.perf_counter()
+            chained = False
+            if spec.unit == "pool":
+                mode = "pool"
+                out = self._pool(materialized(src), spec.pool_bytes)
+            elif spec.unit == "add":
+                mode = "add"
+                parts = [materialized(s) for s in node.inputs]
+                shapes = {tuple(p.shape) for p in parts}
+                if len(shapes) != 1:
+                    raise ValueError(
+                        f"add node {node.id!r} joins mismatched shapes "
+                        f"{sorted(shapes)}")
+                out = parts[0]
+                for p in parts[1:]:
+                    out = out + p
             else:
                 do_split = self.split_capable and spec.coexec
                 x_plan = None
-                if isinstance(act, _Stacked):
-                    if chain and do_split and self._chains(act, spec):
-                        x_in, x_plan = act.data, act.split
-                        chained = True
-                        elided += 1
-                    else:
-                        act, r = self._materialize(act)
-                        reshard += r
-                if not chained:
-                    x_in = self._adapt(act, spec)
+                prod_act = x0 if src is None else acts[src]
+                # gather-elision as a graph property: consume the
+                # producer's group-local stack iff we are its SOLE
+                # consumer, we split too, and the shapes chain exactly
+                if (isinstance(prod_act, _Stacked) and chain and do_split
+                        and self._chains(prod_act, spec)
+                        and len(self.graph.consumers(src)) == 1):
+                    x_in, x_plan = prod_act.data, prod_act.split
+                    chained = True
+                    elided += 1
+                else:
+                    x_in = self._adapt(materialized(src), spec)
                 if do_split:
                     mode = "coexec"
                     op = spec.op
@@ -373,31 +424,38 @@ class PlanExecutor:
                         y = y[:, :, :op.H_out, :op.W_out, :]
                         b = x_in.shape[1] if chained else x_in.shape[0]
                         shape = (b, op.H_out, op.W_out, op.C_out)
-                    act = _Stacked(y, split, shape)
+                    out = _Stacked(y, split, shape)
                     if not chain:       # gather-every-op path: sync now
-                        act, r = self._materialize(act)
+                        out, r = self._materialize(out)
                         reshard += r
                 else:
                     mode = "exclusive"
-                    act = self._dense(x_in, w, spec)
-            jax.block_until_ready(act.data if isinstance(act, _Stacked)
-                                  else act)
+                    out = self._dense(x_in, w, spec)
+            acts[node.id] = out
+            jax.block_until_ready(out.data if isinstance(out, _Stacked)
+                                  else out)
             timings.append(MeasurementRecord(
                 index=i, unit=spec.unit, label=spec_label(spec), mode=mode,
                 c_fast=spec.c_fast, c_slow=spec.c_slow,
                 chained_input=chained,
-                gathered_output=not isinstance(act, _Stacked),
+                gathered_output=not isinstance(out, _Stacked),
                 wall_us=(time.perf_counter() - t0) * 1e6,
                 pred_us=spec.pred_total_us,
                 op=spec.op, source=SOURCE_EXECUTOR, device=prov.device,
                 host=host, plan_key=self.plan.key,
-                network_fingerprint=prov.network_fingerprint))
+                network_fingerprint=prov.network_fingerprint,
+                node_id=node.id))
+            # free consumed producers (keep the graph output alive)
+            for s in node.inputs:
+                remaining[s] -= 1
+                if remaining[s] == 0:
+                    acts.pop(s, None)
 
         # the terminal sync point: with chaining, the last co-executed op's
         # gather is deferred to here — time it and charge it to that op so
         # chained and gather-every-op wall totals stay comparable
         t0 = time.perf_counter()
-        y, r = self._materialize(act)
+        y, r = self._materialize(acts[self.graph.output.id])
         jax.block_until_ready(y)
         reshard += r
         if timings and r:
@@ -411,16 +469,23 @@ class PlanExecutor:
         return y, report
 
     def run_oracle(self, x: Optional[jax.Array] = None) -> jax.Array:
-        """The unsplit reference: every unit dense, identical params and
+        """The unsplit reference: every node dense, identical params and
         shape adaptation — what split execution must match elementwise."""
-        act = (self.input_template() if x is None
-               else jnp.asarray(x, self.dtype))
-        for spec, w in zip(self.specs, self.params):
+        x0 = (self.input_template() if x is None
+              else jnp.asarray(x, self.dtype))
+        acts: Dict[str, jax.Array] = {}
+        for node, spec, w in zip(self.graph, self.specs, self.params):
+            src = acts[node.inputs[0]] if node.inputs else x0
             if spec.unit == "pool":
-                act = self._pool(act, spec.pool_bytes)
+                acts[node.id] = self._pool(src, spec.pool_bytes)
+            elif spec.unit == "add":
+                out = acts[node.inputs[0]]
+                for s in node.inputs[1:]:
+                    out = out + acts[s]
+                acts[node.id] = out
             else:
-                act = self._dense(self._adapt(act, spec), w, spec)
-        return act
+                acts[node.id] = self._dense(self._adapt(src, spec), w, spec)
+        return acts[self.graph.output.id]
 
 
 # --------------------------------------------------------------------- CLI

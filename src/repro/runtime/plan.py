@@ -2,11 +2,19 @@
 
 The paper runs predictor-driven partitioning "offline, as part of the
 compilation process" (3-4 ms per operation).  This module makes that story
-concrete: a `CoexecPlan` is the compiled artifact — the full per-op
+concrete: a `CoexecPlan` is the compiled artifact — the full per-node
 `PartitionDecision` schedule of a network plus the provenance needed to know
 when it is safe to reuse (device, threads, sync mechanism, candidate-grid
 step, network fingerprint, predictor checksum).  Plans serialize to JSON and
 round-trip exactly (floats survive via repr-shortest encoding).
+
+Plans are built over the graph IR (`repro.graph`).  Schedule entries are
+keyed by node id; a plan over a legacy unit-chain graph (canonical "n{i}"
+ids) serializes in the exact pre-IR format — no "id" keys, no "graph"
+section — so stored plan JSON and cache keys are bit-identical to what the
+unit-list era wrote, and old on-disk caches stay warm.  Real DAG plans
+(fan-out, residual adds, attention/ssm nodes) embed their graph and carry
+explicit ids.
 
 `python -m repro.runtime.plan --network resnet18 --device moto2022` compiles
 a plan from scratch (training small predictors on the analytic simulator)
@@ -25,9 +33,10 @@ import numpy as np
 
 from repro.core.networks import Unit
 from repro.core.partitioner import PartitionDecision
-from repro.core.planner import PlanReport
+from repro.core.planner import GraphPlanReport, PlanReport
 from repro.core.sync import SyncMechanism
 from repro.core.types import Op
+from repro.graph.ir import Graph, from_units
 from repro.kernels.registry import (op_from_json, op_kind,  # noqa: F401 —
                                     op_label, op_to_json)   # re-exported
 
@@ -176,15 +185,18 @@ class ExecSpec:
     each co-execution group owns (`c_fast` = the GPU-analogue share,
     `c_slow` = the CPU-analogue share), and the predicted latency the
     fidelity report compares executed timings against.  Pool units carry
-    only their output bytes.
+    only their output bytes; add units carry nothing; attention/ssm units
+    carry their op with a forced exclusive placement.  `node_id` names the
+    graph node the spec lowers (metadata: excluded from equality).
     """
 
-    unit: str                        # "conv" | "linear" | "pool"
+    unit: str                  # "conv"|"linear"|"attention"|"ssm"|"pool"|"add"
     op: Optional[Op] = None
     pool_bytes: int = 0
     c_fast: int = 0
     c_slow: int = 0
     pred_total_us: float = 0.0
+    node_id: str = dataclasses.field(default="", compare=False)
 
     @property
     def exclusive(self) -> bool:
@@ -192,14 +204,15 @@ class ExecSpec:
 
     @property
     def coexec(self) -> bool:
-        return self.unit != "pool" and not self.exclusive
+        return self.op is not None and not self.exclusive
 
 
-def decision_to_spec(dec: PartitionDecision) -> ExecSpec:
+def decision_to_spec(dec: PartitionDecision, node_id: str = "") -> ExecSpec:
     """Lower a planning decision to its executable spec (GPU share -> fast
     group, CPU share -> slow group, mirroring the TPU transfer)."""
     return ExecSpec(unit=op_kind(dec.op), op=dec.op, c_fast=dec.c_gpu,
-                    c_slow=dec.c_cpu, pred_total_us=dec.pred_total_us)
+                    c_slow=dec.c_cpu, pred_total_us=dec.pred_total_us,
+                    node_id=node_id)
 
 
 def spec_label(spec: ExecSpec) -> str:
@@ -208,6 +221,8 @@ def spec_label(spec: ExecSpec) -> str:
     rendering delegates to the kernel registry's `op_label`)."""
     if spec.unit == "pool":
         return f"pool {spec.pool_bytes}B"
+    if spec.unit == "add":
+        return f"add {spec.node_id}".rstrip()
     return op_label(spec.op)
 
 
@@ -217,10 +232,16 @@ def spec_label(spec: ExecSpec) -> str:
 class CoexecPlan:
     """Compile-once / execute-many co-execution schedule.
 
-    `schedule` mirrors the network's unit list: pool units pass through as
-    `{"unit": "pool", "bytes": n}`, conv/linear units carry their
-    `PartitionDecision`.  The report fields are optional — plans compiled
-    from a bare op list (e.g. the Table 2 sweeps) have no end-to-end totals.
+    `schedule` mirrors the network graph in topological order: pool nodes
+    pass through as `{"unit": "pool", "bytes": n}`, add joins as
+    `{"unit": "add"}`, conv/linear nodes carry their `PartitionDecision`,
+    attention/ssm nodes their op + analytic `pred_us`.  Entries of a
+    non-chain plan carry an `"id"` and the plan embeds its graph
+    (`graph_json`); unit-chain plans omit both — their ids are the
+    canonical positions ("n{i}") and the graph reconstructs from the
+    schedule — which keeps the serialized format bit-identical to the
+    pre-IR era.  The report fields are optional — plans compiled from a
+    bare op list (e.g. the Table 2 sweeps) have no end-to-end totals.
     """
 
     provenance: PlanProvenance
@@ -228,19 +249,36 @@ class CoexecPlan:
     baseline_us: Optional[float] = None
     individual_us: Optional[float] = None
     end_to_end_us: Optional[float] = None
+    graph_json: Optional[Dict[str, Any]] = None
 
     # ---------------------------------------------------------- accessors
     @property
     def key(self) -> str:
         return self.provenance.key
 
+    def node_ids(self) -> List[str]:
+        """Schedule-order node ids ("n{i}" when entries carry none)."""
+        return [e.get("id", f"n{i}") for i, e in enumerate(self.schedule)]
+
     @property
     def decisions(self) -> List[PartitionDecision]:
         return [decision_from_json(e["decision"]) for e in self.schedule
-                if e["unit"] != "pool"]
+                if "decision" in e]
+
+    @property
+    def decisions_by_node(self) -> Dict[str, PartitionDecision]:
+        """Per-node partition decisions keyed by graph node id."""
+        return {nid: decision_from_json(e["decision"])
+                for nid, e in zip(self.node_ids(), self.schedule)
+                if "decision" in e}
 
     @property
     def units(self) -> List[Unit]:
+        if self.graph_json is not None:
+            raise ValueError(
+                "this plan was compiled over a non-chain graph (fan-out, "
+                "add joins, or attention/ssm nodes); use plan.graph_ir() "
+                "instead of the legacy unit-list view")
         out: List[Unit] = []
         for e in self.schedule:
             if e["unit"] == "pool":
@@ -249,15 +287,38 @@ class CoexecPlan:
                 out.append((e["unit"], op_from_json(e["decision"]["op"])))
         return out
 
+    def graph_ir(self) -> Graph:
+        """The plan's network graph — embedded for DAG plans,
+        reconstructed from the schedule for legacy unit chains."""
+        cached = getattr(self, "_graph_ir", None)
+        if cached is not None:
+            return cached
+        if self.graph_json is not None:
+            g = Graph.from_json(self.graph_json)
+        else:
+            g = from_units(self.units)
+        self._graph_ir = g
+        return g
+
     def exec_specs(self) -> List[ExecSpec]:
-        """The schedule lowered to executable specs, in unit order (the
-        input contract of `repro.runtime.executor.PlanExecutor`)."""
+        """The schedule lowered to executable specs, in topological order
+        (the input contract of `repro.runtime.executor.PlanExecutor`)."""
         out: List[ExecSpec] = []
-        for e in self.schedule:
+        for nid, e in zip(self.node_ids(), self.schedule):
             if e["unit"] == "pool":
-                out.append(ExecSpec(unit="pool", pool_bytes=int(e["bytes"])))
-            else:
-                out.append(decision_to_spec(decision_from_json(e["decision"])))
+                out.append(ExecSpec(unit="pool", pool_bytes=int(e["bytes"]),
+                                    node_id=nid))
+            elif e["unit"] == "add":
+                out.append(ExecSpec(unit="add", node_id=nid))
+            elif "decision" in e:
+                out.append(decision_to_spec(
+                    decision_from_json(e["decision"]), node_id=nid))
+            else:                       # attention / ssm: forced exclusive
+                out.append(ExecSpec(unit=e["unit"],
+                                    op=op_from_json(e["op"]),
+                                    pred_total_us=float(e.get("pred_us",
+                                                              0.0)),
+                                    node_id=nid))
         return out
 
     def report(self) -> Optional[PlanReport]:
@@ -272,12 +333,15 @@ class CoexecPlan:
 
     # ------------------------------------------------------------- codecs
     def to_json(self) -> Dict[str, Any]:
-        return {"schema_version": self.provenance.schema_version,
-                "provenance": self.provenance.to_json(),
-                "schedule": self.schedule,
-                "report": {"baseline_us": self.baseline_us,
-                           "individual_us": self.individual_us,
-                           "end_to_end_us": self.end_to_end_us}}
+        doc = {"schema_version": self.provenance.schema_version,
+               "provenance": self.provenance.to_json(),
+               "schedule": self.schedule,
+               "report": {"baseline_us": self.baseline_us,
+                          "individual_us": self.individual_us,
+                          "end_to_end_us": self.end_to_end_us}}
+        if self.graph_json is not None:
+            doc["graph"] = self.graph_json
+        return doc
 
     @staticmethod
     def from_json(d: Dict[str, Any]) -> "CoexecPlan":
@@ -286,7 +350,8 @@ class CoexecPlan:
                           schedule=d["schedule"],
                           baseline_us=rep.get("baseline_us"),
                           individual_us=rep.get("individual_us"),
-                          end_to_end_us=rep.get("end_to_end_us"))
+                          end_to_end_us=rep.get("end_to_end_us"),
+                          graph_json=d.get("graph"))
 
     def dumps(self) -> str:
         return json.dumps(self.to_json(), indent=1)
@@ -318,6 +383,61 @@ def build_schedule(units: Sequence[Unit],
             schedule.append({"unit": kind,
                              "decision": decision_to_json(next(it))})
     return schedule
+
+
+def build_graph_schedule(graph: Graph,
+                         decisions: Dict[str, PartitionDecision],
+                         opaque_us: Dict[str, float]
+                         ) -> List[Dict[str, Any]]:
+    """Lower a planned graph into the schedule entry list.
+
+    Unit-chain graphs emit the exact pre-IR entry format (no "id" keys —
+    their node ids canonicalize to positions on reload, matching the
+    content-addressed fingerprint, which ignores ids); everything else
+    carries explicit node ids (and the caller embeds the graph via
+    `graph_json`).
+    """
+    legacy = graph.is_unit_chain()
+    schedule: List[Dict[str, Any]] = []
+    for node in graph:
+        if node.kind == "pool":
+            entry: Dict[str, Any] = {"unit": "pool",
+                                     "bytes": int(node.pool_bytes)}
+        elif node.kind == "add":
+            entry = {"unit": "add"}
+        elif node.splittable:
+            entry = {"unit": node.kind,
+                     "decision": decision_to_json(decisions[node.id])}
+        else:
+            entry = {"unit": node.kind, "op": op_to_json(node.op),
+                     "pred_us": float(opaque_us[node.id])}
+        if not legacy:
+            entry["id"] = node.id
+        schedule.append(entry)
+    return schedule
+
+
+def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
+                           mechanism: SyncMechanism, step: int, seed: int,
+                           pred_checksum: str, planner: str =
+                           PLANNER_PREDICTOR,
+                           calibration: str = "",
+                           with_totals: bool = True) -> CoexecPlan:
+    """Assemble the compiled plan of a `plan_graph`/`grid_plan_graph` run
+    (provenance fingerprint = the graph's content-addressed digest)."""
+    prov = PlanProvenance(device=report.device, threads=report.threads,
+                          mechanism=mechanism.value, step=step, seed=seed,
+                          network_fingerprint=graph.fingerprint(),
+                          predictor_checksum=pred_checksum,
+                          planner=planner, calibration=calibration)
+    return CoexecPlan(
+        provenance=prov,
+        schedule=build_graph_schedule(graph, report.decisions,
+                                      report.opaque_us),
+        baseline_us=report.baseline_us if with_totals else None,
+        individual_us=report.individual_us if with_totals else None,
+        end_to_end_us=report.end_to_end_us if with_totals else None,
+        graph_json=None if graph.is_unit_chain() else graph.to_json())
 
 
 def plan_from_report(units: Sequence[Unit], report: PlanReport, *,

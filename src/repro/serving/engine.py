@@ -11,11 +11,14 @@ An engine can be constructed with a `repro.CompiledNetwork`
 (`coexec_plan=...`, the pre-facade spelling, still supported): a
 deployment ships the offline partitioning artifact alongside the model
 instead of re-planning at serving time — and the engine *executes* it.
-`execute_plan()` lowers the plan's schedule (projection/linear and conv
-units alike) through `PlanExecutor` onto the co-execution mesh, keeping
-the per-op fidelity report on `engine.last_execution_report` for ops
-teams to compare executed against planned latency.  With `compiled=` the
-engine shares the compiled network's memoized executor.
+`execute_plan()` lowers the plan's op graph — projection/linear and conv
+nodes channel-split, attention/SSM decoder-block nodes through their
+registered kernels, residual adds materialized — through `PlanExecutor`
+onto the co-execution mesh, keeping the per-node fidelity report on
+`engine.last_execution_report` for ops teams to compare executed against
+planned latency.  With `compiled=` the engine shares the compiled
+network's memoized executor; plans compiled from `graph.from_model`
+configs execute the same way the legacy unit-chain plans do.
 
 With `measurement_store=` (a `repro.measure.MeasurementStore` or a
 directory path), every `execute_plan` call auto-appends its per-op

@@ -83,8 +83,12 @@ def test_registry_is_the_shared_dispatch_table():
     x = jnp.ones((4, 32)); w = jnp.ones((32, 64))
     np.testing.assert_allclose(np.asarray(low.oracle(x, w, lin)),
                                np.asarray(x @ w))
+    # decoder-block kinds are first-class registry entries (graph IR era),
+    # but never splittable; unknown kinds still raise
+    assert not registry.get("attention").splittable
+    assert not registry.get("ssm").splittable
     with pytest.raises(KeyError):
-        registry.get("attention")
+        registry.get("softmax")
 
 
 def test_conv_lowering_crops_to_declared_shape():
