@@ -7,7 +7,10 @@ Pixel 4 / Pixel 5 / Moto 2022 / OnePlus 11.
 `--execute` additionally lowers one compiled network through the
 `repro.compile` facade and reports executed-vs-predicted latency per op
 (predictions model the phone, execution runs on this host — the per-op
-ratio's spread is the fidelity signal).
+ratio's spread is the fidelity signal), then runs EVERY network both ways
+through the executor — per-node walk vs fused segment walk — and reports
+the wall-time comparison (fused should never lose: same computation,
+strictly fewer dispatches and device syncs).
 """
 from __future__ import annotations
 
@@ -57,6 +60,9 @@ def run(execute: bool = False, exec_device: str = "moto2022",
     if execute:
         rows += _execute_rows(compiled_networks[(exec_device, exec_network)],
                               exec_device, exec_network, chain)
+        for name in NETWORKS:
+            rows += _fused_rows(compiled_networks[(exec_device, name)],
+                                exec_device, name)
     return rows
 
 
@@ -82,6 +88,31 @@ def _execute_rows(compiled, dev: str, name: str, chain: bool) -> list:
     return rows
 
 
+def _fused_rows(compiled, dev: str, name: str) -> list:
+    """Fused (segment walk) vs unfused (per-node walk) wall time for one
+    network — best of 2 timed runs each, after the shared warmup."""
+    best = {}
+    for fused in (False, True):
+        reps = [compiled.profile(fused=fused, warmup=True)
+                for _ in range(2)]
+        best[fused] = min(reps, key=lambda r: r.wall_us)
+    ru, rf = best[False], best[True]
+    speedup = ru.wall_us / rf.wall_us if rf.wall_us > 0 else float("inf")
+    print(f"# {name}: fused {rf.wall_us / 1e3:.1f} ms "
+          f"({len(rf.segment_wall_us)} segments, {rf.sync_points} syncs) "
+          f"vs unfused {ru.wall_us / 1e3:.1f} ms ({ru.sync_points} syncs) "
+          f"-> {speedup:.2f}x")
+    return [
+        csv_row(f"tab3_exec_{dev}_{name}_unfused", ru.wall_us,
+                f"sync={ru.sync_points},reshard={ru.reshard_points},"
+                f"elided={ru.elided}"),
+        csv_row(f"tab3_exec_{dev}_{name}_fused", rf.wall_us,
+                f"segments={len(rf.segment_wall_us)},"
+                f"sync={rf.sync_points},reshard={rf.reshard_points},"
+                f"elided={rf.elided},speedup={speedup:.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -99,7 +130,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     # --execute writes to a separate suite so plain tab3.json stays a
     # stable row set for cross-PR tracking
-    suite = "tab3_exec" if args.execute else "tab3"
+    suite = "tab3_e2e" if args.execute else "tab3"
     extra = ({"execute": True, "exec_device": args.exec_device,
               "exec_network": args.exec_network,
               "chain": not args.no_chain} if args.execute else None)

@@ -389,25 +389,29 @@ class CompiledNetwork:
         return self._executors[key]
 
     def run(self, x=None, *, dtype="float32", chain: bool = True,
-            warmup: bool = False, seed: int = 0, use_pallas: bool = False):
+            warmup: bool = False, fused: bool = False, seed: int = 0,
+            use_pallas: bool = False):
         """Execute the plan once; returns the output activation.
 
-        The per-op `ExecutionReport` of this run is kept on
-        `self.last_report` (and `profile()` is the report-first spelling).
+        `fused=True` takes the segment walk (one jitted program per fused
+        segment, bit-identical outputs); the per-node walk is the
+        `fused=False` reference.  The per-op `ExecutionReport` of this run
+        is kept on `self.last_report` (and `profile()` is the report-first
+        spelling).
         """
         exe = self.executor(dtype=dtype, seed=seed, use_pallas=use_pallas)
-        y, report = exe.run(x, chain=chain, warmup=warmup)
+        y, report = exe.run(x, chain=chain, warmup=warmup, fused=fused)
         self.last_report = report
         return y
 
     def profile(self, x=None, *, dtype="float32", chain: bool = True,
-                warmup: bool = True, seed: int = 0,
+                warmup: bool = True, fused: bool = False, seed: int = 0,
                 use_pallas: bool = False):
         """Execute the plan and return the executed-vs-predicted
         `ExecutionReport` (warmed up by default so timings are
         steady-state, not tracing + compilation)."""
         exe = self.executor(dtype=dtype, seed=seed, use_pallas=use_pallas)
-        _, report = exe.run(x, chain=chain, warmup=warmup)
+        _, report = exe.run(x, chain=chain, warmup=warmup, fused=fused)
         self.last_report = report
         return report
 
@@ -420,15 +424,17 @@ class CompiledNetwork:
 
     def record(self, x=None, *, store=DEFAULT_MEASUREMENTS_DIR,
                dtype="float32", chain: bool = True, warmup: bool = True,
-               seed: int = 0, use_pallas: bool = False):
+               fused: bool = False, seed: int = 0, use_pallas: bool = False):
         """Execute the plan and append its per-op `MeasurementRecord`s to
         the measurement store (keyed by this plan's provenance digest).
 
         Returns the `ExecutionReport`; the accumulated records are what
-        `recalibrate()` fits on.
+        `recalibrate()` fits on.  Fused runs record with
+        `source="fused"` (segment wall attributed pro-rata) and feed the
+        same calibration fit.
         """
         report = self.profile(x, dtype=dtype, chain=chain, warmup=warmup,
-                              seed=seed, use_pallas=use_pallas)
+                              fused=fused, seed=seed, use_pallas=use_pallas)
         self._store(store).append(report)
         return report
 
@@ -488,16 +494,17 @@ class CompiledNetwork:
             f"cpu{prov.threads} mechanism={prov.mechanism} "
             f"step={prov.step} planner={prov.planner}",
             f"  key={self.key}  fingerprint={prov.network_fingerprint}",
-            f"  {'node':>12}  {'label':<42} {'cpu':>5}/{'gpu':<5} "
-            f"{'pred_us':>9}  placement",
+            f"  {'node':>12}  {'seg':>3}  {'label':<42} "
+            f"{'cpu':>5}/{'gpu':<5} {'pred_us':>9}  placement",
         ]
         n_co = 0
         for spec in self.plan.exec_specs():
             label = spec_label(spec)     # same renderer as execute --per-op
             tag = spec.node_id
+            seg = f"{spec.segment}" if spec.segment >= 0 else "-"
             if spec.unit in ("pool", "add"):
-                lines.append(f"  {tag:>12}  {label:<42} {'-':>5}/{'-':<5} "
-                             f"{'-':>9}  gpu (no sync)")
+                lines.append(f"  {tag:>12}  {seg:>3}  {label:<42} "
+                             f"{'-':>5}/{'-':<5} {'-':>9}  gpu (no sync)")
                 continue
             c_cpu, c_gpu = spec.c_slow, spec.c_fast
             if spec.coexec:
@@ -509,12 +516,15 @@ class CompiledNetwork:
                 placement = "gpu-only"
             else:
                 placement = "cpu-only"
-            lines.append(f"  {tag:>12}  {label:<42} {c_cpu:>5}/"
+            lines.append(f"  {tag:>12}  {seg:>3}  {label:<42} {c_cpu:>5}/"
                          f"{c_gpu:<5} {spec.pred_total_us:>9.1f}  "
                          f"{placement}")
         n_ops = sum(1 for e in self.plan.schedule
                     if e["unit"] not in ("pool", "add"))
-        tail = f"  {n_co}/{n_ops} ops co-executed"
+        parts = self.plan.segment_partition()
+        n_fused = sum(1 for s in parts if s.kind == "fused")
+        tail = (f"  {n_co}/{n_ops} ops co-executed | "
+                f"{len(parts)} segments ({n_fused} fused)")
         if self.plan.end_to_end_us is not None:
             speedup = self.plan.baseline_us / self.plan.end_to_end_us
             tail += (f" | baseline {self.plan.baseline_us / 1e3:.1f} ms -> "

@@ -160,9 +160,31 @@ def _cmd_execute(args) -> int:
     print(f"  {groups}")
     report = compiled.profile(chain=not args.no_chain,
                               warmup=not args.no_warmup)
+    if args.fused:
+        import numpy as np
+        # differential spelling: run both walks on the same input and
+        # compare outputs byte-for-byte (the harness CI greps this line)
+        x = exe.input_template()
+        y_unfused = compiled.run(x, warmup=True)
+        rep_unfused = compiled.last_report
+        y_fused = compiled.run(x, warmup=True, fused=True)
+        rep_fused = compiled.last_report
+        identical = (np.asarray(y_fused).tobytes()
+                     == np.asarray(y_unfused).tobytes())
+        n_seg = len(rep_fused.segment_wall_us)
+        print(f"  fused: {n_seg} segments, {rep_fused.sync_points} syncs "
+              f"(vs {rep_unfused.sync_points} unfused), outputs "
+              f"{'bit-identical' if identical else 'DIVERGED'}")
+        print(f"  fused wall {rep_fused.wall_us / 1e3:.1f} ms vs unfused "
+              f"{rep_unfused.wall_us / 1e3:.1f} ms")
+        report = rep_fused
+        if not identical:
+            return 1
     if args.per_op:
         for t in report.timings:
             extra = " chained" if t.chained_input else ""
+            if t.segment >= 0:
+                extra += f" seg={t.segment}"
             print(f"  [{t.index:02d}] {t.label:42s} {t.mode:9s} "
                   f"{t.c_fast}/{t.c_slow} wall {t.wall_us:9.0f}us "
                   f"pred {t.pred_us:8.1f}us{extra}")
@@ -275,6 +297,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              "include tracing + compilation)")
     p_exec.add_argument("--per-op", action="store_true",
                         help="print one line per executed unit")
+    p_exec.add_argument("--fused", action="store_true",
+                        help="also run the fused segment walk and compare "
+                             "it byte-for-byte against the per-node walk")
 
     p_cal = sub.add_parser(
         "calibrate", help="record executions, fit a latency calibrator, "

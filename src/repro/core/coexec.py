@@ -160,6 +160,30 @@ def gather_stacked(y: jax.Array, plan: SplitPlan, mesh: Mesh) -> jax.Array:
     return jnp.concatenate([y_fast, y_slow], axis=-1)
 
 
+def gather_stacked_traced(y: jax.Array, plan: SplitPlan,
+                          mesh: Mesh) -> jax.Array:
+    """`gather_stacked` spelled as a shard_map program, safe under jit.
+
+    `gather_stacked` reshards with `jax.device_put`, which cannot appear
+    inside a traced (jitted) computation.  Fused segment programs instead
+    reconstruct the full activation with the same `_merge_stacked`
+    collective the chained consumers use (all-gather over lane + coexec,
+    static padding slices) and emit it replicated.  Both spellings are
+    pure data movement over identical values, so they agree bit-for-bit.
+    """
+
+    def merge(y_local: jax.Array) -> jax.Array:
+        return _merge_stacked(y_local, plan)
+
+    kwargs = dict(mesh=mesh, in_specs=(_stacked_spec(y.ndim),),
+                  out_specs=P())
+    try:
+        fn = _shard_map()(merge, check_rep=False, **kwargs)
+    except TypeError:       # jax versions without the check_rep knob
+        fn = _shard_map()(merge, **kwargs)
+    return fn(y)
+
+
 def coexec_matmul(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
                   mesh: Mesh, *, gather: bool = True,
                   x_plan: SplitPlan | None = None) -> jax.Array:

@@ -23,6 +23,10 @@ _EXPORTS = {
     "STRUCTURAL_KINDS": "repro.graph.ir",
     "Graph": "repro.graph.ir",
     "Node": "repro.graph.ir",
+    "SEGMENT_EXCLUSIVE": "repro.graph.ir",
+    "SEGMENT_FUSED": "repro.graph.ir",
+    "SEGMENT_POOL": "repro.graph.ir",
+    "Segment": "repro.graph.ir",
     "from_units": "repro.graph.ir",
     "TINY_CONFIGS": "repro.graph.frontends",
     "fan_out_demo": "repro.graph.frontends",

@@ -32,7 +32,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import (Any, Collection, Dict, FrozenSet, Iterator, List,
+                    Optional, Sequence, Tuple)
 
 from repro.core.networks import Unit, pool_out_edge
 from repro.core.types import Op
@@ -121,6 +122,39 @@ class Node:
                         if d.get("op") is not None else None),
                     pool_bytes=int(d.get("bytes", 0)),
                     inputs=tuple(d.get("inputs", ())))
+
+
+#: segment kinds — "fused" runs as one jitted program, the others are
+#: per-node eager singletons (true reshard/dispatch boundaries)
+SEGMENT_FUSED = "fused"
+SEGMENT_POOL = "pool"
+SEGMENT_EXCLUSIVE = "exclusive"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One contiguous run of a segment partition (see `Graph.segments`).
+
+    A "fused" segment is a maximal same-mesh run of co-executed nodes and
+    residual adds that lowers to a single jitted program; "pool" and
+    "exclusive" segments are singletons that stay on the eager per-node
+    path (pooling, unsplit kinds, and exclusively-placed ops are true
+    dispatch boundaries).
+    """
+
+    kind: str                           # fused | pool | exclusive
+    node_ids: Tuple[str, ...]
+
+    def __post_init__(self):
+        if self.kind not in (SEGMENT_FUSED, SEGMENT_POOL,
+                             SEGMENT_EXCLUSIVE):
+            raise ValueError(f"unknown segment kind {self.kind!r}")
+        if not self.node_ids:
+            raise ValueError("a segment needs at least one node")
+        object.__setattr__(self, "node_ids", tuple(self.node_ids))
+
+    def __len__(self) -> int:
+        return len(self.node_ids)
 
 
 class Graph:
@@ -278,6 +312,104 @@ class Graph:
                     f"edge {n.inputs[0]!r} -> {n.id!r}: producer emits "
                     f"{tuple(produced)} but the consumer declares "
                     f"{tuple(declared)}")
+
+    # --------------------------------------------------------- segmentation
+    def _chains_edge(self, producer: Node, consumer: Node) -> bool:
+        """Whether the producer->consumer edge can stay group-local: the
+        consumer is an op node whose declared input shape equals the
+        producer's inferred output shape exactly (any adaptation is a true
+        reshard boundary)."""
+        declared = self.input_shape(consumer.id)
+        if declared is None:
+            return consumer.kind == "add"       # adds join materialized-
+        return tuple(self.output_shape(producer.id)) == tuple(declared)
+
+    def segments(self, coexec: Collection[str]) -> List[Segment]:
+        """Partition the topological order into executable segments.
+
+        `coexec` names the nodes the plan co-executes (channel-split).
+        Fusable nodes — co-executed ops and residual "add" joins — merge
+        into maximal "fused" runs; every other node (pool, exclusive or
+        unsplit op kinds) is a singleton segment.  A fused run is cut
+        after a node exactly at the unfused executor's materialization
+        points:
+
+          * fan-out or graph output (`len(consumers) != 1` — a shared
+            split output is gathered once),
+          * the sole consumer is not fusable (pool/exclusive boundary),
+          * the sole consumer declares an input shape that differs from
+            the producer's output (shape-adaptation boundary),
+
+        plus a convexity pass: every non-final node of a fused run must
+        have all of its consumers inside the run (the run has a single
+        published output), so runs broken up by interleaved non-fusable
+        nodes split rather than leak interior values.
+
+        The returned segments cover `self.nodes` exactly, in order.
+        """
+        coexec = frozenset(coexec)
+
+        def fusable(n: Node) -> bool:
+            return n.id in coexec or n.kind == "add"
+
+        runs: List[Tuple[str, List[Node]]] = []
+        cur: List[Node] = []
+        for n in self.nodes:
+            if not fusable(n):
+                if cur:
+                    runs.append((SEGMENT_FUSED, cur))
+                    cur = []
+                kind = SEGMENT_POOL if n.kind == "pool" else SEGMENT_EXCLUSIVE
+                runs.append((kind, [n]))
+                continue
+            cur.append(n)
+            cons = self.consumers(n.id)
+            cut = len(cons) != 1
+            if not cut:
+                nxt = self._by_id[cons[0]]
+                cut = not fusable(nxt) or not self._chains_edge(n, nxt)
+            if cut:
+                runs.append((SEGMENT_FUSED, cur))
+                cur = []
+        if cur:
+            runs.append((SEGMENT_FUSED, cur))
+
+        def convex(run: List[Node]) -> List[List[Node]]:
+            ids = {n.id for n in run}
+            for i, n in enumerate(run[:-1]):
+                if not all(c in ids for c in self.consumers(n.id)):
+                    return convex(run[:i + 1]) + convex(run[i + 1:])
+            return [run]
+
+        out: List[Segment] = []
+        for kind, run in runs:
+            parts = convex(run) if kind == SEGMENT_FUSED else [run]
+            out += [Segment(kind=kind, node_ids=tuple(n.id for n in part))
+                    for part in parts]
+        return out
+
+    def elided(self, coexec: Collection[str]) -> FrozenSet[str]:
+        """The co-executed nodes whose output stays group-local in the
+        chained walk: their sole consumer is a co-executed op node whose
+        declared input shape matches exactly (the executor's gather-elision
+        predicate as a pure graph property, for batch-1 activations)."""
+        coexec = frozenset(coexec)
+        out = set()
+        for n in self.nodes:
+            if n.id not in coexec:
+                continue
+            u = self.sole_consumer(n.id)
+            if (u is not None and u.id in coexec and u.op is not None
+                    and self._chains_edge(n, u)):
+                out.add(n.id)
+        return frozenset(out)
+
+    def materialization_points(self, coexec: Collection[str]
+                               ) -> FrozenSet[str]:
+        """The co-executed nodes whose split output must be gathered —
+        exactly the segment boundaries the fused executor reshards at."""
+        coexec = frozenset(coexec)
+        return coexec - self.elided(coexec)
 
     # --------------------------------------------------------- unit compat
     def is_unit_chain(self) -> bool:

@@ -19,6 +19,9 @@ import importlib
 _EXPORTS = {
     "MEASUREMENT_SCHEMA_VERSION": "repro.measure.record",
     "MeasurementRecord": "repro.measure.record",
+    "SOURCE_EXECUTOR": "repro.measure.record",
+    "SOURCE_FUSED": "repro.measure.record",
+    "SOURCE_SIMULATOR": "repro.measure.record",
     "record_for_op": "repro.measure.record",
     "usable_for_fidelity": "repro.measure.record",
     "DEFAULT_STORE_DIR": "repro.measure.store",

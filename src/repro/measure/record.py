@@ -42,6 +42,9 @@ MEASUREMENT_SCHEMA_VERSION = 1
 #: record sources
 SOURCE_EXECUTOR = "executor"      # wall-clock timed plan execution
 SOURCE_SIMULATOR = "simulator"    # analytic device-model measurement
+SOURCE_FUSED = "fused"            # segment-walk execution: per-node wall is
+                                  # the segment wall attributed pro-rata by
+                                  # predicted latency
 
 #: execution modes (executor) + the simulator's pseudo-mode
 MODE_COEXEC = "coexec"
@@ -79,6 +82,7 @@ class MeasurementRecord:
     plan_key: str = ""           # PlanProvenance digest (the store key)
     network_fingerprint: str = ""
     node_id: str = ""            # graph node id ("" for bare-op records)
+    segment: int = -1            # fused segment index (-1 = per-node walk)
     schema_version: int = MEASUREMENT_SCHEMA_VERSION
 
     def features(self) -> Optional[List[float]]:

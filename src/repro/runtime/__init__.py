@@ -44,6 +44,9 @@ _EXPORTS = {
     "ExecutionReport": "repro.runtime.executor",
     "OpTiming": "repro.runtime.executor",
     "PlanExecutor": "repro.runtime.executor",
+    "segments_json": "repro.runtime.plan",
+    "SegmentProgram": "repro.runtime.segments",
+    "compile_segments": "repro.runtime.segments",
 }
 
 __all__ = sorted(_EXPORTS)

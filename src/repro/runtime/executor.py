@@ -62,8 +62,8 @@ from repro.core.coexec import (SplitPlan, coexec_conv2d, coexec_matmul,
 from repro.core.networks import Unit, pool_out_edge
 from repro.graph.ir import Graph
 from repro.kernels import registry
-from repro.measure.record import (SOURCE_EXECUTOR, MeasurementRecord,
-                                  usable_for_fidelity)
+from repro.measure.record import (SOURCE_EXECUTOR, SOURCE_FUSED,
+                                  MeasurementRecord, usable_for_fidelity)
 from repro.runtime.plan import (CoexecPlan, ExecSpec, network_fingerprint,
                                 spec_label)
 
@@ -85,6 +85,11 @@ class ExecutionReport:
     timings: List[MeasurementRecord]
     reshard_points: int
     elided: int
+    fused: bool = False          # segment walk (True) vs per-node walk
+    sync_points: int = 0         # device syncs issued by the walk
+    #: fused runs: per-segment wall, in partition order (the per-node
+    #: wall_us of member records is this attributed pro-rata by pred_us)
+    segment_wall_us: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def wall_us(self) -> float:
@@ -126,9 +131,11 @@ class ExecutionReport:
             ratio = f"(x{self.wall_us / self.predicted_us:.2f})"
         else:
             ratio = "(ratio n/a: no predicted latency)"
+        seg = (f"{len(self.segment_wall_us)} segments "
+               f"({self.sync_points} syncs), " if self.fused else "")
         return (f"fidelity: {n} units ({self.count('coexec')} co-executed, "
                 f"{self.count('exclusive')} exclusive, "
-                f"{self.count('pool')} pool), "
+                f"{self.count('pool')} pool), {seg}"
                 f"{self.reshard_points} reshard points "
                 f"({self.elided} elided), "
                 f"executed {self.wall_us / 1e3:.1f} ms vs predicted "
@@ -141,6 +148,9 @@ class ExecutionReport:
                 "split_capable": self.split_capable,
                 "reshard_points": self.reshard_points,
                 "elided": self.elided,
+                "fused": self.fused,
+                "sync_points": self.sync_points,
+                "segment_wall_us": list(self.segment_wall_us),
                 "wall_us": self.wall_us,
                 "predicted_us": self.predicted_us,
                 "timings": [t.to_json() for t in self.timings]}
@@ -152,7 +162,10 @@ class ExecutionReport:
             network_fingerprint=d["network_fingerprint"],
             chain=d["chain"], split_capable=d["split_capable"],
             timings=[MeasurementRecord.from_json(t) for t in d["timings"]],
-            reshard_points=d["reshard_points"], elided=d["elided"])
+            reshard_points=d["reshard_points"], elided=d["elided"],
+            fused=d.get("fused", False),
+            sync_points=d.get("sync_points", 0),
+            segment_wall_us=list(d.get("segment_wall_us", [])))
 
 
 # ------------------------------------------------------------- activations
@@ -173,11 +186,32 @@ class _Stacked:
 _Act = Union[jax.Array, _Stacked]
 
 
-def _fit_axis(x: jax.Array, axis: int, size: int) -> jax.Array:
-    """Deterministically re-materialize one axis to `size` (tile + crop)."""
+def _fit_axis(x: jax.Array, axis: int, size: int, *, align: int = 8,
+              adapt: bool = False) -> jax.Array:
+    """Re-materialize one axis to `size`.
+
+    By default this is strict: the only tolerated mismatch is cropping
+    away alignment padding — `size <= cur <= size` rounded up to `align`
+    (callers on a split mesh pass the lcm-of-8-and-lanes granularity the
+    channel split pads to).  Anything else raises: it means the caller
+    wired incompatible shapes together, and silently tiling values to
+    paper over that corrupts results without failing any test.
+
+    `adapt=True` opts in to the deterministic tile + crop the executor
+    uses for *declared* shape adaptation (`_adapt`: ResNet projection
+    shortcuts in the legacy unit chains), where re-materializing is the
+    documented semantics rather than an accident.
+    """
     cur = x.shape[axis]
     if cur == size:
         return x
+    if not adapt:
+        padded = -(-size // align) * align
+        if not (size < cur <= padded):
+            raise ValueError(
+                f"axis {axis} has size {cur}, expected {size} (or its "
+                f"alignment padding up to {padded}); shapes do not chain "
+                "and this call site does not adapt")
     if cur < size:
         reps = [1] * x.ndim
         reps[axis] = -(-size // cur)
@@ -223,7 +257,10 @@ class PlanExecutor:
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.last_report: Optional[ExecutionReport] = None
-        self._warmed: set = set()      # chain flags already executed once
+        self._warmed: set = set()      # (chain, fused) keys executed once
+        # segment programs, memoized per input shape (chaining is
+        # shape-exact, so the fused layout depends on the input shape)
+        self._programs: Dict[Tuple[int, ...], list] = {}
 
         rng = np.random.default_rng(seed)
         self.params: List[Optional[jax.Array]] = []
@@ -278,13 +315,13 @@ class PlanExecutor:
         if spec.unit == "conv":
             if x.ndim == 2:                   # linear -> conv (not in the
                 x = x.reshape(1, 1, *x.shape)  # paper's nets, but total)
-            x = _fit_axis(x, 1, op.H_in)
-            x = _fit_axis(x, 2, op.W_in)
-            return _fit_axis(x, 3, op.C_in)
+            x = _fit_axis(x, 1, op.H_in, adapt=True)
+            x = _fit_axis(x, 2, op.W_in, adapt=True)
+            return _fit_axis(x, 3, op.C_in, adapt=True)
         # 2D (rows, channels) contracts: linear, attention, ssm
         shape = tuple(registry.get(spec.unit).input_shape(op))
         flat = x.reshape(-1)
-        flat = _fit_axis(flat, 0, int(np.prod(shape)))
+        flat = _fit_axis(flat, 0, int(np.prod(shape)), adapt=True)
         return flat.reshape(shape)
 
     def _pool(self, x: jax.Array, pool_bytes: int) -> jax.Array:
@@ -318,9 +355,22 @@ class PlanExecutor:
             return act.shape == (op.L, op.C_in)
         return act.shape == (1, op.H_in, op.W_in, op.C_in)
 
+    # ------------------------------------------------------------ segments
+    def segment_programs(self, x_shape: Optional[Tuple[int, ...]] = None):
+        """The compiled `SegmentProgram` list for input shape `x_shape`
+        (default: the input template's shape).  Memoized per shape."""
+        if x_shape is None:
+            x_shape = tuple(self.input_template().shape)
+        x_shape = tuple(x_shape)
+        if x_shape not in self._programs:
+            from repro.runtime.segments import compile_segments
+            self._programs[x_shape] = compile_segments(self, x_shape)
+        return self._programs[x_shape]
+
     # ----------------------------------------------------------------- run
     def run(self, x: Optional[jax.Array] = None, *, chain: bool = True,
-            warmup: bool = False) -> Tuple[jax.Array, ExecutionReport]:
+            warmup: bool = False, fused: bool = False
+            ) -> Tuple[jax.Array, ExecutionReport]:
         """Execute the plan; returns (output, ExecutionReport).
 
         `warmup=True` runs the whole schedule once untimed first, so the
@@ -336,12 +386,25 @@ class PlanExecutor:
         the measurement store and any calibration fit from it).  The
         CLIs and `tab3 --execute` warm up by default; equivalence tests
         skip it for speed.
+
+        `fused=True` takes the segment walk instead of the per-node walk:
+        the plan's partition lowered into one jitted program per fused
+        segment (see `repro.runtime.segments`), bit-identical outputs,
+        one device sync per segment.  The per-node walk stays as the
+        `fused=False` reference.
         """
-        if warmup and chain not in self._warmed:
-            self._execute(x, chain=chain)        # untimed: not published
-            self._warmed.add(chain)
-        y, report = self._execute(x, chain=chain)
-        self._warmed.add(chain)
+        if fused and not chain:
+            raise ValueError(
+                "fused=True implies chaining — chain=False is the "
+                "gather-every-op reference walk and has no fused form")
+        step = (lambda: self._execute_fused(x)) if fused else (
+            lambda: self._execute(x, chain=chain))
+        key = (chain, fused)
+        if warmup and key not in self._warmed:
+            step()                               # untimed: not published
+            self._warmed.add(key)
+        y, report = step()
+        self._warmed.add(key)
         self.last_report = report
         return y, report
 
@@ -465,7 +528,80 @@ class PlanExecutor:
             device=prov.device,
             network_fingerprint=prov.network_fingerprint,
             chain=chain, split_capable=self.split_capable, timings=timings,
-            reshard_points=reshard, elided=elided)
+            reshard_points=reshard, elided=elided,
+            # one block_until_ready per node plus the terminal one
+            sync_points=len(timings) + 1)
+        return y, report
+
+    def _execute_fused(self, x: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, ExecutionReport]:
+        """The segment walk: one jitted program (and one device sync) per
+        fused segment, eager singletons for pool/exclusive nodes.
+
+        A segment's wall time cannot be split per member by measurement —
+        the whole point is that the members no longer sync — so each
+        member record carries the segment wall attributed **pro-rata by
+        predicted latency** (equal shares when the segment has no
+        prediction), flagged `source="fused"` and tagged with its segment
+        index.  Summing member walls recovers the segment wall exactly,
+        so report totals stay comparable with the per-node walk, and
+        `Calibrator.fit` consumes the records unchanged.
+        """
+        x0: jax.Array = (self.input_template() if x is None
+                         else jnp.asarray(x, self.dtype))
+        programs = self.segment_programs(tuple(x0.shape))
+        pos = {n.id: i for i, n in enumerate(self.graph)}
+        acts: Dict[Optional[str], jax.Array] = {None: x0}
+        timings: List[MeasurementRecord] = []
+        segment_wall: List[float] = []
+        reshard = elided = 0
+        host = platform.node()
+        prov = self.plan.provenance
+
+        for sp in programs:
+            t0 = time.perf_counter()
+            if sp.fn is not None:
+                out = sp.fn([acts[s] for s in sp.ext_inputs], sp.weights)
+            else:
+                nid = sp.node_ids[0]
+                spec = self.specs[pos[nid]]
+                src_val = acts[sp.ext_inputs[0]]
+                if sp.modes[nid] == "pool":
+                    out = self._pool(src_val, spec.pool_bytes)
+                else:
+                    out = self._dense(self._adapt(src_val, spec),
+                                      self.params[pos[nid]], spec)
+            jax.block_until_ready(out)
+            wall = (time.perf_counter() - t0) * 1e6
+            segment_wall.append(wall)
+            reshard += sp.gathers
+            elided += sp.elided
+            # convexity: only a segment's last node is consumed downstream
+            acts[sp.node_ids[-1]] = out
+            preds = [self.specs[pos[n]].pred_total_us for n in sp.node_ids]
+            total = sum(preds)
+            for nid, pred in zip(sp.node_ids, preds):
+                spec = self.specs[pos[nid]]
+                share = (wall * pred / total if total > 0.0
+                         else wall / len(preds))
+                timings.append(MeasurementRecord(
+                    index=pos[nid], unit=spec.unit, label=spec_label(spec),
+                    mode=sp.modes[nid], c_fast=spec.c_fast,
+                    c_slow=spec.c_slow, chained_input=sp.chained[nid],
+                    gathered_output=sp.gathered[nid], wall_us=share,
+                    pred_us=spec.pred_total_us, op=spec.op,
+                    source=SOURCE_FUSED, device=prov.device, host=host,
+                    plan_key=self.plan.key,
+                    network_fingerprint=prov.network_fingerprint,
+                    node_id=nid, segment=sp.index))
+
+        y = acts[self.graph.output.id]
+        report = ExecutionReport(
+            device=prov.device,
+            network_fingerprint=prov.network_fingerprint,
+            chain=True, split_capable=self.split_capable, timings=timings,
+            reshard_points=reshard, elided=elided, fused=True,
+            sync_points=len(programs), segment_wall_us=segment_wall)
         return y, report
 
     def run_oracle(self, x: Optional[jax.Array] = None) -> jax.Array:

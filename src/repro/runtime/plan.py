@@ -27,7 +27,7 @@ import dataclasses
 import hashlib
 import json
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence
 
 import numpy as np
 
@@ -36,7 +36,7 @@ from repro.core.partitioner import PartitionDecision
 from repro.core.planner import GraphPlanReport, PlanReport
 from repro.core.sync import SyncMechanism
 from repro.core.types import Op
-from repro.graph.ir import Graph, from_units
+from repro.graph.ir import Graph, Segment, from_units
 from repro.kernels.registry import (op_from_json, op_kind,  # noqa: F401 —
                                     op_label, op_to_json)   # re-exported
 
@@ -187,7 +187,8 @@ class ExecSpec:
     fidelity report compares executed timings against.  Pool units carry
     only their output bytes; add units carry nothing; attention/ssm units
     carry their op with a forced exclusive placement.  `node_id` names the
-    graph node the spec lowers (metadata: excluded from equality).
+    graph node the spec lowers and `segment` its segment-partition index
+    (metadata: both excluded from equality).
     """
 
     unit: str                  # "conv"|"linear"|"attention"|"ssm"|"pool"|"add"
@@ -197,6 +198,7 @@ class ExecSpec:
     c_slow: int = 0
     pred_total_us: float = 0.0
     node_id: str = dataclasses.field(default="", compare=False)
+    segment: int = dataclasses.field(default=-1, compare=False)
 
     @property
     def exclusive(self) -> bool:
@@ -242,6 +244,13 @@ class CoexecPlan:
     schedule — which keeps the serialized format bit-identical to the
     pre-IR era.  The report fields are optional — plans compiled from a
     bare op list (e.g. the Table 2 sweeps) have no end-to-end totals.
+
+    `segments` records the segment-compiler partition the fused executor
+    runs (`[{"kind": ..., "nodes": [...]}, ...]`); like `graph`, the key
+    is omitted-when-absent, and `segment_partition()` re-derives the
+    partition from the schedule for plans (old cached entries, hand-built
+    tests) that carry none — provenance never depends on it, so old
+    on-disk caches stay warm.
     """
 
     provenance: PlanProvenance
@@ -250,6 +259,7 @@ class CoexecPlan:
     individual_us: Optional[float] = None
     end_to_end_us: Optional[float] = None
     graph_json: Optional[Dict[str, Any]] = None
+    segments: Optional[List[Dict[str, Any]]] = None
 
     # ---------------------------------------------------------- accessors
     @property
@@ -300,6 +310,45 @@ class CoexecPlan:
         self._graph_ir = g
         return g
 
+    def coexec_node_ids(self) -> FrozenSet[str]:
+        """Ids of the co-executed (channel-split) nodes — the fusable set
+        the segment partition is computed over."""
+        ids = []
+        for nid, e in zip(self.node_ids(), self.schedule):
+            d = e.get("decision")
+            if d is not None and d["c_cpu"] > 0 and d["c_gpu"] > 0:
+                ids.append(nid)
+        return frozenset(ids)
+
+    def segment_partition(self) -> List[Segment]:
+        """The segment-compiler partition of this plan's schedule.
+
+        Embedded `segments` metadata is used when present and consistent
+        with the schedule; otherwise (old cached plans, hand-built plans)
+        the partition is re-derived from the graph and the plan's coexec
+        decisions — the two spellings agree by construction, since the
+        planners embed exactly `graph.segments(coexec_node_ids())`.
+        """
+        cached = getattr(self, "_segment_partition", None)
+        if cached is not None:
+            return cached
+        parts: Optional[List[Segment]] = None
+        if self.segments is not None:
+            parts = [Segment(kind=e["kind"], node_ids=tuple(e["nodes"]))
+                     for e in self.segments]
+            covered = [nid for s in parts for nid in s.node_ids]
+            if covered != self.node_ids():      # stale metadata: re-derive
+                parts = None
+        if parts is None:
+            parts = self.graph_ir().segments(self.coexec_node_ids())
+        self._segment_partition = parts
+        return parts
+
+    def segment_of(self) -> Dict[str, int]:
+        """node id -> segment-partition index."""
+        return {nid: k for k, seg in enumerate(self.segment_partition())
+                for nid in seg.node_ids}
+
     def exec_specs(self) -> List[ExecSpec]:
         """The schedule lowered to executable specs, in topological order
         (the input contract of `repro.runtime.executor.PlanExecutor`)."""
@@ -319,7 +368,9 @@ class CoexecPlan:
                                     pred_total_us=float(e.get("pred_us",
                                                               0.0)),
                                     node_id=nid))
-        return out
+        seg_of = self.segment_of()
+        return [dataclasses.replace(s, segment=seg_of.get(s.node_id, -1))
+                for s in out]
 
     def report(self) -> Optional[PlanReport]:
         if self.end_to_end_us is None:
@@ -341,6 +392,8 @@ class CoexecPlan:
                           "end_to_end_us": self.end_to_end_us}}
         if self.graph_json is not None:
             doc["graph"] = self.graph_json
+        if self.segments is not None:
+            doc["segments"] = self.segments
         return doc
 
     @staticmethod
@@ -351,7 +404,8 @@ class CoexecPlan:
                           baseline_us=rep.get("baseline_us"),
                           individual_us=rep.get("individual_us"),
                           end_to_end_us=rep.get("end_to_end_us"),
-                          graph_json=d.get("graph"))
+                          graph_json=d.get("graph"),
+                          segments=d.get("segments"))
 
     def dumps(self) -> str:
         return json.dumps(self.to_json(), indent=1)
@@ -417,6 +471,19 @@ def build_graph_schedule(graph: Graph,
     return schedule
 
 
+def segments_json(graph: Graph,
+                  decisions: Dict[str, PartitionDecision]
+                  ) -> List[Dict[str, Any]]:
+    """The plan's embedded segment-partition metadata: `graph.segments`
+    over the co-executed node set of `decisions` (the fused executor's
+    boundary contract, stored so `.explain()` and tooling can print it
+    without re-deriving)."""
+    coexec = {nid for nid, d in decisions.items()
+              if d.c_cpu > 0 and d.c_gpu > 0}
+    return [{"kind": s.kind, "nodes": list(s.node_ids)}
+            for s in graph.segments(coexec)]
+
+
 def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
                            mechanism: SyncMechanism, step: int, seed: int,
                            pred_checksum: str, planner: str =
@@ -437,7 +504,8 @@ def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
         baseline_us=report.baseline_us if with_totals else None,
         individual_us=report.individual_us if with_totals else None,
         end_to_end_us=report.end_to_end_us if with_totals else None,
-        graph_json=None if graph.is_unit_chain() else graph.to_json())
+        graph_json=None if graph.is_unit_chain() else graph.to_json(),
+        segments=segments_json(graph, report.decisions))
 
 
 def plan_from_report(units: Sequence[Unit], report: PlanReport, *,
@@ -449,11 +517,15 @@ def plan_from_report(units: Sequence[Unit], report: PlanReport, *,
                           predictor_checksum=pred_checksum,
                           planner=PLANNER_PREDICTOR,
                           calibration=calibration)
+    graph = from_units(units)
+    decisions = {nid: dec for nid, dec in zip(
+        (n.id for n in graph if n.kind != "pool"), report.decisions)}
     return CoexecPlan(provenance=prov,
                       schedule=build_schedule(units, report.decisions),
                       baseline_us=report.baseline_us,
                       individual_us=report.individual_us,
-                      end_to_end_us=report.end_to_end_us)
+                      end_to_end_us=report.end_to_end_us,
+                      segments=segments_json(graph, decisions))
 
 
 # --------------------------------------------------------------------- CLI

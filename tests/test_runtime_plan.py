@@ -73,8 +73,11 @@ def test_plan_json_roundtrip(mux_predictors, tmp_path):
     plan.save(path)
     assert CoexecPlan.load(path).decisions == plan.decisions
     # the artifact is plain JSON with the documented top-level shape
+    # ("segments" is the fused executor's partition metadata, omitted
+    # when a plan predates it)
     doc = json.loads(path.read_text())
-    assert set(doc) == {"schema_version", "provenance", "schedule", "report"}
+    assert set(doc) == {"schema_version", "provenance", "schedule",
+                        "report", "segments"}
 
 
 def test_fingerprint_and_checksum_are_stable(mux_predictors):
