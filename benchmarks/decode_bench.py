@@ -1,0 +1,120 @@
+"""Decode-block co-execution benchmark — head/state-split planning on the
+tiny decode models (PR 7 headline suite).
+
+Headline rows are the *model-predicted* decode-block latency of the
+planned (axis, split, mode) schedule against the exclusive-GPU baseline on
+the modeled phone — the same convention as tab3 (predictions model the
+phone, execution runs on this host).  One row per attention/ssm node shows
+the chosen partition axis, boundary, and kernel mode with its predicted
+speedup over the best exclusive-GPU mode.
+
+Executed rows are the fidelity signal, not a speedup claim: XLA's virtual
+host devices time-share this machine's cores, so a co-executed split runs
+its two sides serially here.  What execution *can* establish is that the
+split schedule lowers, runs, and reproduces the unsplit oracle
+bit-identically in fp32 — reported per model as `identical`/`maxdiff`
+alongside fused/unfused host wall time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro
+from benchmarks.common import PRED_CACHE, csv_row, plan_cache
+from repro.core.simulator.measure import true_latency_us
+from repro.core.types import AttnOp, SSMOp
+from repro.graph.frontends import from_model
+from repro.kernels import registry
+
+DEVICE = "moto2022"
+THREADS = 3
+
+#: model -> from_model knobs sized so the decode node dominates the block
+#: (long KV cache / long token block) and co-execution wins in the model
+CONFIGS = (
+    ("tiny_decoder", dict(cache_len=4096)),
+    ("tiny_ssm", dict(tokens=4096)),
+    ("tiny_hybrid", dict(blocks=2, cache_len=4096)),
+)
+
+
+def _gpu_only_us(op) -> float:
+    """Exclusive-GPU device-model baseline: best kernel mode for the op."""
+    modes = registry.get(registry.op_kind(op)).modes or (op.mode,)
+    return min(true_latency_us(op.with_mode(m), DEVICE, "gpu")
+               for m in modes)
+
+
+def _decision_rows(name: str, compiled) -> list:
+    """One row per attention/ssm node: planned (axis, split, mode) and its
+    predicted speedup over the exclusive-GPU baseline."""
+    rows = []
+    for nid, dec in sorted(compiled.decisions_by_node.items()):
+        if not isinstance(dec.op, (AttnOp, SSMOp)):
+            continue
+        gpu_us = _gpu_only_us(dec.op)
+        speedup = gpu_us / dec.pred_total_us if dec.pred_total_us > 0 \
+            else float("inf")
+        rows.append(csv_row(
+            f"decode_{name}_{nid}", dec.pred_total_us,
+            f"axis={dec.axis},split={dec.c_gpu}/{dec.c_gpu + dec.c_cpu},"
+            f"mode={dec.op.mode},gpu_us={gpu_us:.1f},"
+            f"speedup={speedup:.2f}x"))
+    return rows
+
+
+def _exec_rows(name: str, compiled) -> list:
+    """Host execution: fused/unfused wall (best of 2, warmed) plus
+    bit-fidelity of the split schedule against the unsplit oracle."""
+    best = {}
+    for fused in (False, True):
+        reps = [compiled.profile(fused=fused, warmup=True)
+                for _ in range(2)]
+        best[fused] = min(reps, key=lambda r: r.wall_us)
+    y = np.asarray(compiled.run(fused=True, warmup=True))
+    ref = np.asarray(compiled.executor().run_oracle())
+    identical = bool(np.array_equal(y, ref))
+    maxdiff = float(np.max(np.abs(y - ref))) if y.size else 0.0
+    print(f"# {name}: fused {best[True].wall_us / 1e3:.1f} ms vs unfused "
+          f"{best[False].wall_us / 1e3:.1f} ms, oracle "
+          f"{'bit-identical' if identical else f'maxdiff={maxdiff:.1e}'}")
+    return [csv_row(
+        f"decode_{name}_exec", best[True].wall_us,
+        f"unfused_us={best[False].wall_us:.1f},"
+        f"pred_us={best[True].predicted_us:.1f},"
+        f"identical={int(identical)},maxdiff={maxdiff:.1e}")]
+
+
+def run(execute: bool = True) -> list:
+    rows = []
+    cache = plan_cache()
+    target = repro.Target(device=DEVICE, threads=THREADS)
+    for name, kw in CONFIGS:
+        graph = from_model(name, **kw)
+        compiled = repro.compile(graph, target, cache=cache,
+                                 predictor_cache=PRED_CACHE)
+        r = compiled.report()
+        rows.append(csv_row(
+            f"decode_{name}", r.end_to_end_us,
+            f"base_us={r.baseline_us:.1f},"
+            f"e2e={r.end_to_end_speedup:.2f}x,"
+            f"ind={r.individual_speedup:.2f}x,"
+            f"warm={int(compiled.from_cache)}"))
+        rows += _decision_rows(name, compiled)
+        if execute:
+            rows += _exec_rows(name, compiled)
+    print(f"# plan cache: {cache.hits} hits / {cache.misses} misses "
+          f"({cache.root})")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import bench_main
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-execute", action="store_true",
+                    help="skip host execution (planning rows only)")
+    args = ap.parse_args()
+    bench_main("decode_bench", lambda: run(execute=not args.no_execute))

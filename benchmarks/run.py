@@ -34,7 +34,63 @@ SUITES = {
     "tab4": "benchmarks.tab4_ablation",
     "roofline": "benchmarks.roofline_report",
     "calibration": "benchmarks.calibration_bench",
+    "decode_bench": "benchmarks.decode_bench",
 }
+
+
+def _committed_metrics(suite: str):
+    """Metric rows of the last *committed* reports/bench/<suite>.json
+    (via `git show HEAD:`), or None when the suite has no committed
+    baseline yet."""
+    import json
+    import subprocess
+    rel = f"reports/bench/{suite}.json"
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{rel}"],
+                             cwd=Path(__file__).resolve().parents[1],
+                             capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    if out.returncode != 0 or not out.stdout.strip():
+        return None
+    try:
+        return json.loads(out.stdout).get("metrics")
+    except json.JSONDecodeError:
+        return None
+
+
+def compare_suite(suite: str, rows, tolerance=None) -> list:
+    """Diff this run's metrics against the committed baseline report.
+
+    Returns the regressed metric names: shared rows whose us_per_call grew
+    by more than `tolerance` (fraction).  With tolerance None every drift
+    is printed as a warning and nothing counts as a regression (CI's
+    default is warn-only; gate by passing --tolerance).
+    """
+    from benchmarks.common import parse_rows
+    base = _committed_metrics(suite)
+    if base is None:
+        print(f"# compare {suite}: no committed baseline at HEAD "
+              f"(reports/bench/{suite}.json) — skipping")
+        return []
+    old = {m["name"]: float(m["us_per_call"]) for m in base}
+    regressed = []
+    for m in parse_rows([str(r) for r in rows]):
+        name, cur = m["name"], float(m["us_per_call"])
+        if name.endswith("_wallclock") or name not in old or old[name] <= 0:
+            continue
+        rel = (cur - old[name]) / old[name]
+        if tolerance is not None and rel > tolerance:
+            regressed.append(name)
+            print(f"# compare {suite} REGRESSION {name}: "
+                  f"{old[name]:.2f} -> {cur:.2f} us ({rel:+.1%}, "
+                  f"tolerance {tolerance:.0%})")
+        elif abs(rel) > 0.05:
+            print(f"# compare {suite} {name}: "
+                  f"{old[name]:.2f} -> {cur:.2f} us ({rel:+.1%})")
+    if not regressed:
+        print(f"# compare {suite}: ok vs {len(old)} committed metrics")
+    return regressed
 
 
 def main(argv=None) -> int:
@@ -42,6 +98,13 @@ def main(argv=None) -> int:
     ap.add_argument("--only", choices=list(SUITES), default=None)
     ap.add_argument("--list", action="store_true",
                     help="print registered suite names and exit")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff each suite's metrics against the last "
+                         "committed reports/bench/<suite>.json")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="with --compare: exit non-zero when any shared "
+                         "metric's us_per_call grows by more than this "
+                         "fraction (e.g. 0.25); default is warn-only")
     args = ap.parse_args(argv)
     if args.list:
         for name in SUITES:
@@ -52,6 +115,7 @@ def main(argv=None) -> int:
     from benchmarks.common import write_bench_report
 
     print("name,us_per_call,derived")
+    regressions = []
     for name in names:
         mod = importlib.import_module(SUITES[name])
         t0 = time.time()
@@ -62,6 +126,9 @@ def main(argv=None) -> int:
         except Exception as e:                       # noqa: BLE001
             print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}")
             raise
+        if args.compare:
+            regressions += compare_suite(name, rows,
+                                         tolerance=args.tolerance)
         wall = time.time() - t0
         print(f"{name}_wallclock,{wall*1e6:.0f},seconds={wall:.1f}")
         # a suite that collects unified-schema records exposes a module-
@@ -72,6 +139,10 @@ def main(argv=None) -> int:
             name, rows, extra={"wallclock_s": round(wall, 2)},
             measurements=measurements_fn() if measurements_fn else None)
         print(f"# wrote {path}")
+    if regressions:
+        print(f"# {len(regressions)} metric(s) regressed beyond "
+              f"--tolerance: {', '.join(regressions)}")
+        return 1
     return 0
 
 

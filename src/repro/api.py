@@ -39,7 +39,7 @@ import hashlib
 import json
 import warnings
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.networks import NETWORKS, Unit
 from repro.core.simulator.devices import DEVICES
@@ -126,41 +126,53 @@ class Target:
 
 def _trained_mux_predictors(device: str, threads: int, *, samples: int,
                             estimators: int,
-                            cache_dir: Optional[Union[str, Path]] = None):
+                            cache_dir: Optional[Union[str, Path]] = None,
+                            kinds: Sequence[str] = ("linear", "conv")):
     """Train (or load from `cache_dir`) the (cpu, gpu) MuxPredictor pair.
 
     The on-disk layout is one pickle per underlying LatencyPredictor, keyed
     by every training knob — a load is checksum-identical to a retrain, so
     predictor caching never changes which plan-cache entry a compile hits.
+    `kinds` beyond linear/conv (attention, ssm) add decode members as extra
+    role files; the linear/conv files are shared with conv-only compiles.
     """
     from repro.runtime.plan import train_mux_predictors
 
     if cache_dir is None:
         return train_mux_predictors(device, threads, samples=samples,
-                                    estimators=estimators)
+                                    estimators=estimators, kinds=kinds)
 
     from repro.core.predictor.train import LatencyPredictor, MuxPredictor
     root = Path(cache_dir)
     stem = f"mux_{device}_cpu{threads}_{samples}x{estimators}"
-    paths = {role: root / f"{stem}_{role}.pkl"
-             for role in ("cpu_linear", "cpu_conv", "gpu_linear",
-                          "gpu_conv")}
+    paths = {f"{side}_{kind}": root / f"{stem}_{side}_{kind}.pkl"
+             for side in ("cpu", "gpu") for kind in kinds}
     if all(p.exists() for p in paths.values()):
         try:
-            cp = MuxPredictor(LatencyPredictor.load(paths["cpu_linear"]),
-                              LatencyPredictor.load(paths["cpu_conv"]))
-            gp = MuxPredictor(LatencyPredictor.load(paths["gpu_linear"]),
-                              LatencyPredictor.load(paths["gpu_conv"]))
+            def member(side, kind):
+                if kind not in kinds:
+                    return None
+                return LatencyPredictor.load(paths[f"{side}_{kind}"])
+
+            cp = MuxPredictor(member("cpu", "linear"),
+                              member("cpu", "conv"),
+                              attention=member("cpu", "attention"),
+                              ssm=member("cpu", "ssm"))
+            gp = MuxPredictor(member("gpu", "linear"),
+                              member("gpu", "conv"),
+                              attention=member("gpu", "attention"),
+                              ssm=member("gpu", "ssm"))
             return cp, gp
         except Exception:           # noqa: BLE001 — corrupt cache: retrain
             pass
     cp, gp = train_mux_predictors(device, threads, samples=samples,
-                                  estimators=estimators)
+                                  estimators=estimators, kinds=kinds)
     root.mkdir(parents=True, exist_ok=True)
-    cp.linear.save(paths["cpu_linear"])
-    cp.conv.save(paths["cpu_conv"])
-    gp.linear.save(paths["gpu_linear"])
-    gp.conv.save(paths["gpu_conv"])
+    for side, p in (("cpu", cp), ("gpu", gp)):
+        for kind in kinds:
+            m = p.member(kind)
+            if m is not None:
+                m.save(paths[f"{side}_{kind}"])
     return cp, gp
 
 
@@ -268,9 +280,19 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             step=target.step, seed=target.seed, cache=cache)
     else:
         if predictors is None:
+            kinds: Tuple[str, ...] = ("linear", "conv")
+            if is_graph:
+                # decode kinds present in the graph get predictor members
+                # so the planner can price (axis, split, mode) candidates;
+                # conv/linear-only graphs keep the pre-decode predictor
+                # bundle (and its checksum, hence their cached plans)
+                kinds += tuple(sorted(
+                    {n.kind for n in graph_or_ops
+                     if n.op is not None and n.kind in ("attention", "ssm")}))
             predictors = _trained_mux_predictors(
                 target.device, target.threads, samples=samples,
-                estimators=estimators, cache_dir=predictor_cache)
+                estimators=estimators, cache_dir=predictor_cache,
+                kinds=kinds)
         cpu_pred, gpu_pred = predictors
         if gpu_pred.device != target.device:
             raise ValueError(
@@ -507,11 +529,26 @@ class CompiledNetwork:
                              f"{'-':>5}/{'-':<5} {'-':>9}  gpu (no sync)")
                 continue
             c_cpu, c_gpu = spec.c_slow, spec.c_fast
+            mode_tag = ""
+            if spec.unit in ("attention", "ssm") and spec.op is not None \
+                    and getattr(spec.op, "mode", ""):
+                mode_tag = f", mode={spec.op.mode}"
             if spec.coexec:
-                placement = "co-executed"
                 n_co += 1
+                if spec.axis != "channel":
+                    from repro.kernels.registry import axis_spec
+                    size = axis_spec(spec.unit, spec.axis).size(spec.op)
+                    placement = (f"coexec {spec.axis}-split "
+                                 f"{c_gpu}/{size}{mode_tag}")
+                else:
+                    placement = "co-executed"
             elif spec.unit in ("attention", "ssm"):
-                placement = "gpu-only (unsplit kind)"
+                if c_gpu == 0 and c_cpu == 0:
+                    placement = "gpu-only (unsplit kind)"   # legacy plan
+                elif c_gpu:
+                    placement = f"gpu-only{mode_tag}"
+                else:
+                    placement = f"cpu-only{mode_tag}"
             elif c_gpu:
                 placement = "gpu-only"
             else:

@@ -42,6 +42,9 @@ def _add_compile_args(ap: argparse.ArgumentParser) -> None:
                          "overrides --network")
     ap.add_argument("--cache-len", type=int, default=128,
                     help="KV-cache length of --model attention nodes")
+    ap.add_argument("--tokens", type=int, default=1,
+                    help="tokens per decode step of --model graphs "
+                         "(chunked prefill; pure-SSM configs only)")
     ap.add_argument("--blocks", type=int, default=1,
                     help="decoder blocks to chain for --model graphs")
     ap.add_argument("--device", default="moto2022", choices=sorted(DEVICES))
@@ -79,7 +82,8 @@ def _network_arg(args):
     if args.model or _is_model_name(name):
         from repro.graph import from_model
         return from_model(name, blocks=args.blocks,
-                          cache_len=args.cache_len)
+                          cache_len=args.cache_len,
+                          tokens=getattr(args, "tokens", 1))
     return name
 
 

@@ -76,18 +76,26 @@ def split_for_mesh(c_out: int, c_fast: int, mesh: Mesh,
                      align=int(np.lcm(align, lanes)))
 
 
-def pack_weights(w: jax.Array, plan: SplitPlan) -> jax.Array:
+def pack_weights(w: jax.Array, plan: SplitPlan,
+                 mesh: Mesh | None = None) -> jax.Array:
     """(..., C_out) -> (2, ..., c_pad): per-group padded weight slices.
 
     Works for linear (C_in, C_out) and conv (K, K, C_in, C_out) weights —
-    the split is always over the trailing output-channel dim.
+    the split is always over the trailing output-channel dim.  With
+    `mesh`, the packed stack is placed in its consumption sharding
+    (group- and lane-wise) up front, so repeated co-execution calls on
+    the same packed weights do not re-shard per call.
     """
     lead = w.shape[:-1]
     wf = jnp.zeros(lead + (plan.c_pad,), w.dtype).at[..., :plan.c_fast].set(
         w[..., :plan.c_fast])
     ws = jnp.zeros(lead + (plan.c_pad,), w.dtype).at[..., :plan.c_slow].set(
         w[..., plan.c_fast:])
-    return jnp.stack([wf, ws])
+    packed = jnp.stack([wf, ws])
+    if mesh is not None:
+        packed = jax.device_put(
+            packed, NamedSharding(mesh, _stacked_spec(packed.ndim)))
+    return packed
 
 
 def coexec_mesh(devices=None) -> Mesh:
@@ -122,6 +130,41 @@ def _shard_map():
     if sm is None:
         from jax.experimental.shard_map import shard_map as sm
     return sm
+
+
+_PROGRAM_CACHE: dict = {}
+
+
+def mesh_fingerprint(mesh: Mesh) -> tuple:
+    """Hashable identity of a mesh (device ids × axis names)."""
+    return (tuple(int(d.id) for d in mesh.devices.flat),
+            tuple(mesh.axis_names))
+
+
+def cached_coexec_program(key: tuple, build):
+    """One jitted program per eager co-execution call-site configuration.
+
+    Eager shard_map closures are rebuilt on every call, which defeats
+    jax's trace and compile caches (fresh function identity each time)
+    and turns every co-executed node into a retrace + recompile.  Call
+    sites pass a hashable key covering everything that shapes the traced
+    program (op, split geometry, input shapes/dtypes, mesh) plus a
+    zero-argument `build` returning the shard_map-wrapped local; the
+    jitted program is built once per distinct key and reused for the
+    life of the process.  (Eager shard_map dispatch executes the body
+    primitive-by-primitive across the mesh — orders of magnitude slower
+    than one compiled program, and re-traced per call besides.)
+
+    Jitting routes the program through the GSPMD partitioner, whose
+    fusion choices can perturb the fp32 rounding of *composite*
+    nonlinearities (sigmoid-style rewrites); lowerings that need
+    bit-identity against an eager oracle keep such transforms out of the
+    traced body (they pre-apply them at weight-pack time) so the traced
+    program is fusion-stable."""
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        fn = _PROGRAM_CACHE[key] = jax.jit(build())
+    return fn
 
 
 def _merge_stacked(x_local: jax.Array, x_plan: SplitPlan) -> jax.Array:
@@ -195,17 +238,23 @@ def coexec_matmul(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
     Returns (L, C_out) if gather else the group-local (2, L, c_pad) stack.
     """
 
-    def local(x_l, w_l):
-        # w_l: (1, C_in, c_pad) — this group's slice
-        x_full = _merge_stacked(x_l, x_plan) if x_plan is not None else x_l
-        return (x_full @ w_l[0])[None]        # (1, L, c_pad)
+    def build():
+        def local(x_l, w_l):
+            # w_l: (1, C_in, c_pad) — this group's slice
+            x_full = (_merge_stacked(x_l, x_plan) if x_plan is not None
+                      else x_l)
+            return (x_full @ w_l[0])[None]    # (1, L, c_pad)
 
-    x_spec = _stacked_spec(3) if x_plan is not None else P()
-    y = _shard_map()(
-        local, mesh=mesh,
-        in_specs=(x_spec, _stacked_spec(3)),
-        out_specs=_stacked_spec(3),
-    )(x, packed_w)                            # (2, L, c_pad) global
+        x_spec = _stacked_spec(3) if x_plan is not None else P()
+        return _shard_map()(
+            local, mesh=mesh,
+            in_specs=(x_spec, _stacked_spec(3)),
+            out_specs=_stacked_spec(3))
+
+    key = ("matmul", x_plan, mesh_fingerprint(mesh),
+           tuple(x.shape), str(x.dtype),
+           tuple(packed_w.shape), str(packed_w.dtype))
+    y = cached_coexec_program(key, build)(x, packed_w)  # (2, L, c_pad)
 
     if not gather:
         return y
@@ -225,20 +274,27 @@ def coexec_conv2d(x: jax.Array, packed_w: jax.Array, plan: SplitPlan,
     semantics (callers crop to the declared ConvOp shape).
     """
 
-    def local(x_l, w_l):
-        x_full = _merge_stacked(x_l, x_plan) if x_plan is not None else x_l
-        y = jax.lax.conv_general_dilated(
-            x_full.astype(jnp.float32), w_l[0].astype(jnp.float32),
-            window_strides=(stride, stride), padding="SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x_full.dtype)
-        return y[None]                        # (1, B, H', W', c_pad)
+    def build():
+        def local(x_l, w_l):
+            x_full = (_merge_stacked(x_l, x_plan) if x_plan is not None
+                      else x_l)
+            y = jax.lax.conv_general_dilated(
+                x_full.astype(jnp.float32), w_l[0].astype(jnp.float32),
+                window_strides=(stride, stride), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO",
+                                   "NHWC")).astype(x_full.dtype)
+            return y[None]                    # (1, B, H', W', c_pad)
 
-    x_spec = _stacked_spec(5) if x_plan is not None else P()
-    y = _shard_map()(
-        local, mesh=mesh,
-        in_specs=(x_spec, _stacked_spec(5)),
-        out_specs=_stacked_spec(5),
-    )(x, packed_w)                            # (2, B, H', W', c_pad)
+        x_spec = _stacked_spec(5) if x_plan is not None else P()
+        return _shard_map()(
+            local, mesh=mesh,
+            in_specs=(x_spec, _stacked_spec(5)),
+            out_specs=_stacked_spec(5))
+
+    key = ("conv2d", x_plan, stride, mesh_fingerprint(mesh),
+           tuple(x.shape), str(x.dtype),
+           tuple(packed_w.shape), str(packed_w.dtype))
+    y = cached_coexec_program(key, build)(x, packed_w)  # (2,B,H',W',c_pad)
 
     if not gather:
         return y

@@ -26,6 +26,7 @@ from repro.core.simulator.measure import (measure_latency_us,
                                           measure_latency_us_batch)
 from repro.core.sync import SyncMechanism, sync_overhead_us
 from repro.core.types import Op
+from repro.kernels import registry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +37,11 @@ class PartitionDecision:
     pred_cpu_us: float
     pred_gpu_us: float
     pred_total_us: float
+    #: partition axis: "channel" (the paper's conv/linear domain, where
+    #: c_cpu/c_gpu count output channels), "head" / "kv-block" /
+    #: "ssm-state" (typed axes, where they count axis units — heads or
+    #: cache positions), or "none" (exclusive placement of an axis kind)
+    axis: str = "channel"
 
     @property
     def exclusive(self) -> bool:
@@ -192,3 +198,162 @@ def speedup_vs_gpu(decision: PartitionDecision, device: str, threads: int, *,
     """Paper's metric: speedup of co-execution over GPU-only execution."""
     return float(speedup_vs_gpu_batch([decision], device, threads,
                                       mechanism=mechanism, seed=seed)[0])
+
+
+# ------------------------------------------------------ typed-axis splits
+#
+# Attention and SSM decode ops partition along registry-typed axes (head /
+# kv-block / ssm-state) instead of output channels, and additionally carry
+# a kernel *mode* the planner chooses.  The same batched two-predict-call
+# structure applies: every (axis, boundary, mode) candidate of every op is
+# flattened into one GPU list and one CPU list.
+
+def _axis_candidate_grid(ops: Sequence[Op]):
+    """Flatten every op's (axis, boundary, mode) candidates.
+
+    Returns (gpu_ops, cpu_ops, n_gpu, n_cpu, axes, extra_bytes, spans).
+    Zero-unit sides are represented by the *full* op (these kinds cannot
+    encode an empty sub-op) and masked to zero latency by the callers;
+    exclusive placements are labeled axis="none" with unit counts 1/0.
+    ``extra_bytes`` carries the kv-block merge traffic (partial outputs
+    from both sides are combined with a log-sum-exp pass).
+    """
+    gpu_ops: List[Op] = []
+    cpu_ops: List[Op] = []
+    n_gpu: List[int] = []
+    n_cpu: List[int] = []
+    axes: List[str] = []
+    extra: List[float] = []
+    spans: List[Tuple[int, int]] = []
+    for op in ops:
+        entry = registry.entry_for(op)
+        modes = entry.modes or ("",)
+        lo = len(gpu_ops)
+        for mode in modes:
+            opm = op.with_mode(mode) if entry.modes else op
+            for side_gpu in (1, 0):
+                gpu_ops.append(opm)
+                cpu_ops.append(opm)
+                n_gpu.append(side_gpu)
+                n_cpu.append(1 - side_gpu)
+                axes.append("none")
+                extra.append(0.0)
+            for spec in registry.axes_for(opm):
+                size, g = spec.size(opm), spec.granularity(opm)
+                for n in range(g, size, g):
+                    registry.validate_axis_split(opm, spec.axis, n)
+                    gpu_ops.append(spec.sub(opm, n))
+                    cpu_ops.append(spec.sub(opm, size - n))
+                    n_gpu.append(n)
+                    n_cpu.append(size - n)
+                    axes.append(spec.axis)
+                    extra.append(2.0 * opm.output_bytes
+                                 if not spec.stackable else 0.0)
+        spans.append((lo, len(gpu_ops)))
+    return (gpu_ops, cpu_ops, np.asarray(n_gpu), np.asarray(n_cpu),
+            axes, np.asarray(extra), spans)
+
+
+def _axis_decide(ops: Sequence[Op], gpu_ops: Sequence[Op],
+                 t_gpu: np.ndarray, t_cpu: np.ndarray,
+                 n_gpu: np.ndarray, n_cpu: np.ndarray, axes: Sequence[str],
+                 extra_bytes: np.ndarray, spans, device: str,
+                 overhead: float) -> List[PartitionDecision]:
+    from repro.core.simulator.devices import DEVICES
+    dev = DEVICES[device]
+    coexec = (n_gpu > 0) & (n_cpu > 0)
+    # Non-stackable axes (extra_bytes > 0, i.e. kv-block) materialize a
+    # log-sum-exp merge of both sides' partials: besides the merge traffic
+    # itself they pay a second sync rendezvous, and cannot amortize it by
+    # chaining into a fused segment.
+    merge_us = extra_bytes / (dev.cpu_mem_gbps * 1e3)
+    merge_us = merge_us + np.where(extra_bytes > 0.0, overhead, 0.0)
+    total = (np.maximum(t_cpu, t_gpu)
+             + np.where(coexec, overhead + merge_us, 0.0))
+    decisions = []
+    for op, (lo, hi) in zip(ops, spans):
+        i = lo + int(np.argmin(total[lo:hi]))
+        chosen = gpu_ops[i]                 # carries the winning mode
+        entry = registry.entry_for(op)
+        full = op.with_mode(chosen.mode) if entry.modes else op
+        decisions.append(PartitionDecision(
+            op=full, c_cpu=int(n_cpu[i]), c_gpu=int(n_gpu[i]),
+            pred_cpu_us=float(t_cpu[i]), pred_gpu_us=float(t_gpu[i]),
+            pred_total_us=float(total[i]), axis=axes[i]))
+    return decisions
+
+
+def axis_partition_batch(ops: Sequence[Op], cpu_pred: LatencyPredictor,
+                         gpu_pred: LatencyPredictor, *,
+                         mechanism: SyncMechanism = SyncMechanism.SVM_POLL
+                         ) -> List[PartitionDecision]:
+    """Predictor-driven (axis, boundary, mode) partitioning of many
+    attention/SSM ops in two batched `predict` calls."""
+    ops = list(ops)
+    if not ops:
+        return []
+    device = gpu_pred.device
+    overhead = sync_overhead_us(device, mechanism)
+    (gpu_ops, cpu_ops, n_gpu, n_cpu, axes, extra,
+     spans) = _axis_candidate_grid(ops)
+    t_gpu = np.where(n_gpu > 0, gpu_pred.predict(gpu_ops), 0.0)
+    t_cpu = np.where(n_cpu > 0, cpu_pred.predict(cpu_ops), 0.0)
+    return _axis_decide(ops, gpu_ops, t_gpu, t_cpu, n_gpu, n_cpu, axes,
+                        extra, spans, device, overhead)
+
+
+def grid_axis_partition_batch(ops: Sequence[Op], device: str, threads: int,
+                              *,
+                              mechanism: SyncMechanism =
+                              SyncMechanism.SVM_POLL,
+                              seed: int = 0) -> List[PartitionDecision]:
+    """Measurement-driven exhaustive (axis, boundary, mode) search."""
+    ops = list(ops)
+    if not ops:
+        return []
+    overhead = sync_overhead_us(device, mechanism)
+    (gpu_ops, cpu_ops, n_gpu, n_cpu, axes, extra,
+     spans) = _axis_candidate_grid(ops)
+    t_gpu = np.where(n_gpu > 0,
+                     measure_latency_us_batch(gpu_ops, device, "gpu",
+                                              seed=seed), 0.0)
+    t_cpu = np.where(n_cpu > 0,
+                     measure_latency_us_batch(cpu_ops, device,
+                                              f"cpu{threads}", seed=seed),
+                     0.0)
+    return _axis_decide(ops, gpu_ops, t_gpu, t_cpu, n_gpu, n_cpu, axes,
+                        extra, spans, device, overhead)
+
+
+def axis_side_ops(decision: PartitionDecision) -> Tuple[Op, Op]:
+    """(gpu_sub_op, cpu_sub_op) of a typed-axis decision; exclusive
+    decisions return the full op for the placed side (the other entry is
+    the full op too — callers mask by the zero unit count)."""
+    op = decision.op
+    if decision.exclusive or decision.axis in ("none", "channel"):
+        return op, op
+    spec = registry.axis_spec(registry.op_kind(op), decision.axis)
+    return (spec.sub(op, decision.c_gpu), spec.sub(op, decision.c_cpu))
+
+
+def axis_realized_latency_us_batch(decisions: Sequence[PartitionDecision],
+                                   device: str, threads: int, *,
+                                   mechanism: SyncMechanism =
+                                   SyncMechanism.SVM_POLL,
+                                   seed: int = 1) -> np.ndarray:
+    """Measured latencies of typed-axis decisions (fresh noise seed)."""
+    decisions = list(decisions)
+    if not decisions:
+        return np.empty(0)
+    sides = [axis_side_ops(d) for d in decisions]
+    t_gpu = measure_latency_us_batch([g for g, _ in sides], device, "gpu",
+                                     seed=seed)
+    t_cpu = measure_latency_us_batch([c for _, c in sides], device,
+                                     f"cpu{threads}", seed=seed)
+    n_gpu = np.array([d.c_gpu for d in decisions])
+    n_cpu = np.array([d.c_cpu for d in decisions])
+    t_gpu = np.where(n_gpu > 0, t_gpu, 0.0)
+    t_cpu = np.where(n_cpu > 0, t_cpu, 0.0)
+    overhead = sync_overhead_us(device, mechanism)
+    exclusive = np.array([d.exclusive for d in decisions])
+    return np.maximum(t_cpu, t_gpu) + np.where(exclusive, 0.0, overhead)

@@ -38,6 +38,8 @@ import numpy as np
 
 from repro.core.networks import Unit
 from repro.core.partitioner import (PartitionDecision,
+                                    axis_partition_batch,
+                                    axis_realized_latency_us_batch,
                                     optimal_partition_batch,
                                     realized_latency_us_batch)
 from repro.core.predictor.train import LatencyPredictor
@@ -45,6 +47,7 @@ from repro.core.simulator.devices import DEVICES
 from repro.core.simulator.measure import measure_latency_us_batch
 from repro.core.sync import SyncMechanism
 from repro.core.types import Op
+from repro.kernels import registry
 
 if TYPE_CHECKING:
     from repro.graph.ir import Graph
@@ -160,6 +163,30 @@ class GraphPlanReport:
         return self.baseline_us / self.end_to_end_us
 
 
+def _can_price_kind(pred: LatencyPredictor, kind: str) -> bool:
+    """Whether a predictor bundle can price an attention/ssm op: a
+    `MuxPredictor` trained with the kind's member.  Plain per-kind
+    predictors (and legacy conv/linear-only bundles) cannot — those
+    planner calls keep the pre-axis opaque-charge behavior."""
+    member = getattr(pred, "member", None)
+    return member is not None and member(kind) is not None
+
+
+def _axis_cpu_frac(dec: PartitionDecision) -> float:
+    """CPU-resident fraction of a decision's output channels, for the
+    boundary-traffic term.  Stackable axis splits own channels pro-rata;
+    a kv-block split materializes its merged output GPU-side (0); an
+    exclusive CPU placement owns everything (1)."""
+    if dec.axis == "channel":
+        return dec.c_cpu / max(1, dec.op.C_out)
+    if dec.axis == "none":
+        return 1.0 if dec.c_gpu == 0 else 0.0
+    spec = registry.axis_spec(registry.op_kind(dec.op), dec.axis)
+    if not spec.stackable:
+        return 0.0
+    return dec.c_cpu / max(1, spec.size(dec.op))
+
+
 def plan_graph(graph: "Graph", cpu_pred: LatencyPredictor,
                gpu_pred: LatencyPredictor, *, threads: int,
                mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
@@ -168,8 +195,12 @@ def plan_graph(graph: "Graph", cpu_pred: LatencyPredictor,
 
     Splittable nodes are partitioned in the same batched predictor /
     measurement calls as the unit-list path; structural nodes (pool, add)
-    are charged one trivial GPU dispatch; attention/ssm nodes get the
-    analytic `opaque_latency_us` charge and a forced exclusive placement.
+    are charged one trivial GPU dispatch.  Attention/ssm nodes are scored
+    over their typed (axis, boundary, mode) candidate grids — two more
+    batched predictor calls — when the predictor bundle has their per-kind
+    members; otherwise they keep the analytic `opaque_latency_us` charge
+    with a forced exclusive placement (the pre-axis behavior, still used
+    by conv/linear-only predictor bundles).
     The boundary-traffic term follows graph edges: a node's crossing cost
     compares its CPU-channel fraction against its *producer's* (0 for
     structural and opaque producers, which materialize GPU-side) — on a
@@ -185,6 +216,20 @@ def plan_graph(graph: "Graph", cpu_pred: LatencyPredictor,
                                             mechanism=mechanism, step=step)
     t_co = realized_latency_us_batch(decision_list, device, threads,
                                      mechanism=mechanism, seed=seed)
+
+    axis_nodes = [n for n in graph
+                  if n.op is not None and not n.splittable
+                  and _can_price_kind(cpu_pred, n.kind)
+                  and _can_price_kind(gpu_pred, n.kind)]
+    axis_gpu_only = measure_latency_us_batch([n.op for n in axis_nodes],
+                                             device, "gpu", seed=seed)
+    axis_list = axis_partition_batch([n.op for n in axis_nodes],
+                                     cpu_pred, gpu_pred,
+                                     mechanism=mechanism)
+    axis_t_co = axis_realized_latency_us_batch(axis_list, device, threads,
+                                               mechanism=mechanism,
+                                               seed=seed)
+    axis_index = {n.id: j for j, n in enumerate(axis_nodes)}
 
     decisions: Dict[str, PartitionDecision] = {}
     opaque_us: Dict[str, float] = {}
@@ -208,6 +253,19 @@ def plan_graph(graph: "Graph", cpu_pred: LatencyPredictor,
             e2e += float(t_co[i]) + boundary_us
             split_frac[node.id] = frac
             i += 1
+        elif node.id in axis_index:        # attention / ssm: typed axes
+            j = axis_index[node.id]
+            dec = axis_list[j]
+            decisions[node.id] = dec
+            baseline += float(axis_gpu_only[j])
+            individual += float(axis_t_co[j])
+            frac = _axis_cpu_frac(dec)
+            frac_in = split_frac.get(node.inputs[0], 0.0) \
+                if node.inputs else 0.0
+            crossing = abs(frac - frac_in) * node.op.input_bytes
+            boundary_us = crossing / (dev.cpu_mem_gbps * 1e3)
+            e2e += float(axis_t_co[j]) + boundary_us
+            split_frac[node.id] = frac
         elif node.op is not None:          # attention / ssm: exclusive
             t = opaque_latency_us(node.op, device)
             opaque_us[node.id] = t
@@ -232,18 +290,24 @@ def grid_plan_graph(graph: "Graph", device: str, threads: int, *,
                     mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
                     step: int = 8, seed: int = 0) -> GraphPlanReport:
     """Measurement-driven (oracle) graph planning: grid-searches every
-    splittable node, charges opaque nodes analytically.  No end-to-end
-    totals — the grid oracle is a per-op upper bound (Table 2), so the
-    report carries decisions and opaque charges only (totals 0)."""
-    from repro.core.partitioner import grid_search_partition_batch
+    splittable node over channels and every attention/ssm node over its
+    typed (axis, boundary, mode) grid.  No end-to-end totals — the grid
+    oracle is a per-op upper bound (Table 2), so the report carries
+    decisions only (totals 0)."""
+    from repro.core.partitioner import (grid_axis_partition_batch,
+                                        grid_search_partition_batch)
 
     split_nodes = graph.splittable_nodes()
     decision_list = grid_search_partition_batch(
         [n.op for n in split_nodes], device, threads, mechanism=mechanism,
         step=step, seed=seed)
     decisions = {n.id: d for n, d in zip(split_nodes, decision_list)}
-    opaque_us = {n.id: opaque_latency_us(n.op, device) for n in graph
-                 if n.op is not None and not n.splittable}
+    axis_nodes = [n for n in graph
+                  if n.op is not None and not n.splittable]
+    axis_list = grid_axis_partition_batch(
+        [n.op for n in axis_nodes], device, threads, mechanism=mechanism,
+        seed=seed)
+    decisions.update({n.id: d for n, d in zip(axis_nodes, axis_list)})
     return GraphPlanReport(device=device, threads=threads, baseline_us=0.0,
                            individual_us=0.0, end_to_end_us=0.0,
-                           decisions=decisions, opaque_us=opaque_us)
+                           decisions=decisions, opaque_us={})

@@ -23,7 +23,7 @@ from typing import Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.types import ConvOp, LinearOp, Op
+from repro.core.types import AttnOp, ConvOp, LinearOp, Op, SSMOp
 
 FLOPS_MIN, FLOPS_MAX = 4e6, 1e9
 
@@ -87,6 +87,42 @@ def sample_conv_ops(n: int, seed: int = 0) -> List[ConvOp]:
                     S=int(rng.choice([1, 2])))
         # keep the simulator in a sane regime (the paper phones also cap
         # feasible op sizes via memory/time limits)
+        if op.flops <= 4 * FLOPS_MAX:
+            ops.append(op)
+    return ops
+
+
+def sample_attn_ops(n: int, seed: int = 0) -> List[AttnOp]:
+    """Decode-attention training set: head/cache dims spanning both the
+    full tiny-model ops and the head/kv-block sub-ops the planner prices,
+    with both kernel modes sampled (the mode index is a feature)."""
+    rng = np.random.default_rng(seed)
+    ops: List[AttnOp] = []
+    while len(ops) < n:
+        h = int(2 ** rng.integers(0, 6))                   # 1..32 heads
+        kv = int(2 ** rng.integers(0, int(np.log2(h)) + 1))
+        hd = int(2 ** rng.integers(3, 8))                  # 8..128
+        s = _structured_dim(rng)
+        mode = str(rng.choice(["streaming", "materialized"]))
+        op = AttnOp(H=h, S=s, KV=kv, hd=hd, mode=mode)
+        if op.flops <= 4 * FLOPS_MAX:
+            ops.append(op)
+    return ops
+
+
+def sample_ssm_ops(n: int, seed: int = 0) -> List[SSMOp]:
+    """SSD-scan training set: a quarter of the draws pin T=1 (the decode
+    regime where fused recurrence wins), the rest sample chunked-prefill
+    scan lengths; both modes sampled."""
+    rng = np.random.default_rng(seed)
+    ops: List[SSMOp] = []
+    while len(ops) < n:
+        t = 1 if rng.random() < 0.25 else _structured_dim(rng)
+        h = int(2 ** rng.integers(0, 6))
+        hd = int(2 ** rng.integers(3, 8))
+        n_state = int(2 ** rng.integers(3, 8))
+        mode = str(rng.choice(["chunked", "recurrent"]))
+        op = SSMOp(T=t, H=h, hd=hd, N=n_state, mode=mode)
         if op.flops <= 4 * FLOPS_MAX:
             ops.append(op)
     return ops

@@ -24,6 +24,14 @@ from repro.kernels import registry
 BLACKBOX_LINEAR = ["L", "C_in", "C_out", "log_flops", "log_weight_bytes"]
 BLACKBOX_CONV = ["H_in", "W_in", "C_in", "C_out", "K", "S",
                  "log_flops", "log_weight_bytes"]
+# the trailing mode index is what lets one predictor price both kernel
+# modes (streaming/materialized, chunked/recurrent) of a decode kind
+BLACKBOX_ATTENTION = ["H", "S", "KV", "hd", "window",
+                      "log_flops", "log_weight_bytes", "mode_index"]
+BLACKBOX_SSM = ["T", "H", "hd", "N",
+                "log_flops", "log_weight_bytes", "mode_index"]
+_BLACKBOX_BY_KIND = {"linear": BLACKBOX_LINEAR, "conv": BLACKBOX_CONV,
+                     "attention": BLACKBOX_ATTENTION, "ssm": BLACKBOX_SSM}
 DISPATCH_FEATURES = ["wg_x", "wg_y", "wg_size", "grid_x", "grid_y",
                      "wg_count", "waves", "wave_quant", "occupancy",
                      "log_padded_flops"]
@@ -63,5 +71,5 @@ def kernel_of(op: Op, device: str) -> str:
 
 
 def feature_names(ops_kind: str, whitebox: bool) -> List[str]:
-    base = BLACKBOX_LINEAR if ops_kind == "linear" else BLACKBOX_CONV
+    base = _BLACKBOX_BY_KIND.get(ops_kind, BLACKBOX_CONV)
     return base + DISPATCH_FEATURES if whitebox else list(base)

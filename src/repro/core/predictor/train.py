@@ -137,24 +137,36 @@ def mape(pred_us: np.ndarray, true_us: np.ndarray) -> float:
 
 @dataclasses.dataclass
 class MuxPredictor:
-    """Routes linear ops to one predictor and conv ops to another; the
-    end-to-end planner spans both op kinds."""
+    """Routes each op kind to its own per-kind predictor; the end-to-end
+    planner spans every kind in a graph.  The decode-kind members default
+    to None so conv/linear-only predictor bundles (and their cached
+    pickles/checksums) are unchanged from before attention/SSM became
+    plannable."""
 
     linear: LatencyPredictor
     conv: LatencyPredictor
+    attention: Optional[LatencyPredictor] = None
+    ssm: Optional[LatencyPredictor] = None
 
     @property
     def device(self) -> str:
         return self.linear.device
 
+    def member(self, kind: str) -> Optional[LatencyPredictor]:
+        return getattr(self, "attention" if kind == "attention" else
+                       "ssm" if kind == "ssm" else kind, None)
+
     def predict(self, ops: Sequence[Op]) -> np.ndarray:
         from repro.kernels.registry import op_kind
         ops = list(ops)
         out = np.empty(len(ops))
-        il = [i for i, o in enumerate(ops) if op_kind(o) == "linear"]
-        ic = [i for i, o in enumerate(ops) if op_kind(o) == "conv"]
-        if il:
-            out[il] = self.linear.predict([ops[i] for i in il])
-        if ic:
-            out[ic] = self.conv.predict([ops[i] for i in ic])
+        kinds = [op_kind(o) for o in ops]
+        for kind in sorted(set(kinds)):
+            idx = [i for i, k in enumerate(kinds) if k == kind]
+            member = self.member(kind)
+            if member is None:
+                raise ValueError(
+                    f"MuxPredictor has no {kind!r} member; train with "
+                    f"kinds including {kind!r}")
+            out[idx] = member.predict([ops[i] for i in idx])
         return out

@@ -19,9 +19,13 @@ from typing import TYPE_CHECKING, List, Sequence
 import numpy as np
 
 from repro.core.simulator.cpu_model import cpu_latency_us
+from repro.core.simulator.decode_model import (attn_cpu_latency_us,
+                                               attn_gpu_latency_us,
+                                               ssm_cpu_latency_us,
+                                               ssm_gpu_latency_us)
 from repro.core.simulator.devices import DEVICES
 from repro.core.simulator.gpu_model import gpu_latency_us
-from repro.core.types import Op
+from repro.core.types import AttnOp, Op, SSMOp
 
 if TYPE_CHECKING:
     from repro.measure.record import MeasurementRecord
@@ -37,6 +41,16 @@ def _stable_seed(*parts) -> int:
 def true_latency_us(op: Op, device: str, backend: str) -> float:
     """Noise-free latency (the simulator oracle). backend: 'gpu' | 'cpuN'."""
     dev = DEVICES[device]
+    if isinstance(op, (AttnOp, SSMOp)):
+        if backend == "gpu":
+            return (attn_gpu_latency_us(op, dev) if isinstance(op, AttnOp)
+                    else ssm_gpu_latency_us(op, dev))
+        if backend.startswith("cpu"):
+            threads = int(backend[3:] or 1)
+            return (attn_cpu_latency_us(op, dev, threads)
+                    if isinstance(op, AttnOp)
+                    else ssm_cpu_latency_us(op, dev, threads))
+        raise ValueError(f"unknown backend {backend!r}")
     if op.C_out == 0:
         return 0.0
     if backend == "gpu":

@@ -8,9 +8,11 @@ the end-to-end planner.
 Beyond the paper's conv/linear grammar, the graph IR (`repro.graph`) also
 schedules decoder-block ops: `AttnOp` (single-position decode attention
 over a KV cache) and `SSMOp` (a chunked SSD state-space scan).  These are
-*not* output-channel-splittable — the kernel registry marks them
-`splittable=False` and the planner schedules them exclusively on the
-GPU-analogue side — but they share the accounting surface (`flops`,
+not output-channel-splittable, but they partition along typed axes of
+their own — attention across query-head groups or KV-cache blocks, SSM
+across state heads — and carry a kernel *mode* (streaming vs materialized
+scores; chunked scan vs fused recurrence) that the planner selects
+alongside the split.  They share the accounting surface (`flops`,
 `input_bytes`, `weight_bytes`, `output_bytes`) so analytic latency charges
 and measurement records treat every op kind uniformly.
 """
@@ -103,6 +105,7 @@ class AttnOp:
     KV: int                   # KV heads (GQA; H % KV == 0)
     hd: int                   # head dimension
     window: int = 0           # 0 = full causal attention
+    mode: str = "streaming"   # kernel mode: streaming | materialized
 
     def __post_init__(self):
         if self.H < 1 or self.KV < 1 or self.H % self.KV:
@@ -111,6 +114,24 @@ class AttnOp:
         if self.S < 1 or self.hd < 1:
             raise ValueError(f"AttnOp needs positive S/hd, "
                              f"got S={self.S} hd={self.hd}")
+        if self.mode not in ("streaming", "materialized"):
+            raise ValueError(f"AttnOp mode must be streaming|materialized, "
+                             f"got {self.mode!r}")
+
+    def with_heads(self, h: int) -> "AttnOp":
+        """Sub-op attending with `h` query heads (GQA group granularity:
+        `h` must be a whole number of H//KV-sized groups)."""
+        group = self.H // self.KV
+        if h % group:
+            raise ValueError(f"head slice {h} breaks GQA groups of {group}")
+        return dataclasses.replace(self, H=h, KV=h // group)
+
+    def with_cache(self, s: int) -> "AttnOp":
+        """Sub-op over a length-`s` block of the KV cache."""
+        return dataclasses.replace(self, S=s)
+
+    def with_mode(self, mode: str) -> "AttnOp":
+        return dataclasses.replace(self, mode=mode)
 
     @property
     def flops(self) -> int:
@@ -144,10 +165,23 @@ class SSMOp:
     H: int                    # SSM heads
     hd: int                   # head dimension
     N: int                    # state dimension per head
+    mode: str = "chunked"     # kernel mode: chunked | recurrent
 
     def __post_init__(self):
         if min(self.T, self.H, self.hd, self.N) < 1:
             raise ValueError(f"SSMOp needs positive dims, got {self}")
+        if self.mode not in ("chunked", "recurrent"):
+            raise ValueError(f"SSMOp mode must be chunked|recurrent, "
+                             f"got {self.mode!r}")
+
+    def with_heads(self, h: int) -> "SSMOp":
+        """Sub-op carrying `h` of the state heads."""
+        if h < 1 or h > self.H:
+            raise ValueError(f"head slice {h} out of range for H={self.H}")
+        return dataclasses.replace(self, H=h)
+
+    def with_mode(self, mode: str) -> "SSMOp":
+        return dataclasses.replace(self, mode=mode)
 
     @property
     def flops(self) -> int:

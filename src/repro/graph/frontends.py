@@ -115,22 +115,32 @@ def _ssm_block(prev: str, i: int, cfg: ModelConfig, tokens: int,
 
 
 def from_model(name_or_config: Union[str, ModelConfig], *,
-               blocks: int = 1, cache_len: int = 128) -> Graph:
+               blocks: int = 1, cache_len: int = 128,
+               tokens: int = 1) -> Graph:
     """Build a decoder-block graph for one decode step of a model config.
 
     * `blocks` — decoder blocks to chain (default 1: the per-block
       workload is what the planner splits; totals scale linearly).
     * `cache_len` — KV-cache length the attention nodes attend over
       (the latency-dominant decode knob).
+    * `tokens` — tokens scanned per step by SSM blocks (1 = pure decode;
+      larger values model chunked prefill, where the scan is long enough
+      for a state-split to pay for its sync).
 
     The entry node is a shared embedding-row projection (splittable), so
     every graph has a well-defined (1, d_model) input contract.  The
     resulting graph passes strict `check_shapes()`.
     """
     cfg = resolve_config(name_or_config)
+    tokens = max(1, tokens)
+    if tokens > 1 and (not cfg.ssm_kind or cfg.attn_every):
+        raise ValueError(
+            "tokens > 1 (chunked prefill) is only modeled for pure-SSM "
+            "configs; attention blocks decode one position at a time")
     d = cfg.d_model
     nodes: List[Node] = [
-        Node(id="embed", kind="linear", op=LinearOp(1, d, d), inputs=()),
+        Node(id="embed", kind="linear", op=LinearOp(tokens, d, d),
+             inputs=()),
     ]
     prev = "embed"
     for i in range(max(1, blocks)):
@@ -143,7 +153,7 @@ def from_model(name_or_config: Union[str, ModelConfig], *,
         if is_attn and cfg.attn_kind != "none":
             prev = _attention_block(prev, i, cfg, cache_len, nodes)
         else:
-            prev = _ssm_block(prev, i, cfg, 1, nodes)
+            prev = _ssm_block(prev, i, cfg, tokens, nodes)
     graph = Graph(nodes)
     graph.check_shapes()
     return graph

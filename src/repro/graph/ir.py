@@ -39,7 +39,11 @@ from repro.core.networks import Unit, pool_out_edge
 from repro.core.types import Op
 from repro.kernels import registry
 
-GRAPH_SCHEMA_VERSION = 1
+# v2: attention/SSM nodes became plannable (axis/mode decisions).  Bumping
+# invalidates DAG-plan fingerprints — their cached plans would now plan
+# differently — while unit-chain fingerprints (legacy canonical form, which
+# predates and omits the version) stay warm for pure conv/linear networks.
+GRAPH_SCHEMA_VERSION = 2
 
 #: node kinds with no kernel-registry op payload
 STRUCTURAL_KINDS = ("pool", "add")

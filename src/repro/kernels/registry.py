@@ -67,9 +67,14 @@ def op_to_json(op: Op) -> Dict[str, Any]:
         return {"kind": "conv", "H_in": op.H_in, "W_in": op.W_in,
                 "C_in": op.C_in, "C_out": op.C_out, "K": op.K, "S": op.S}
     if kind == "attention":
-        return {"kind": "attention", "H": op.H, "S": op.S, "KV": op.KV,
-                "hd": op.hd, "window": op.window}
-    return {"kind": "ssm", "T": op.T, "H": op.H, "hd": op.hd, "N": op.N}
+        d = {"kind": "attention", "H": op.H, "S": op.S, "KV": op.KV,
+             "hd": op.hd, "window": op.window}
+    else:
+        d = {"kind": "ssm", "T": op.T, "H": op.H, "hd": op.hd, "N": op.N}
+    # mode is omitted at its default so pre-mode plan JSON stays byte-stable
+    if op.mode != default_mode(kind):
+        d["mode"] = op.mode
+    return d
 
 
 def op_from_json(d: Dict[str, Any]) -> Op:
@@ -80,9 +85,11 @@ def op_from_json(d: Dict[str, Any]) -> Op:
                       C_out=d["C_out"], K=d["K"], S=d["S"])
     if d["kind"] == "attention":
         return AttnOp(H=d["H"], S=d["S"], KV=d["KV"], hd=d["hd"],
-                      window=d.get("window", 0))
+                      window=d.get("window", 0),
+                      mode=d.get("mode", default_mode("attention")))
     if d["kind"] == "ssm":
-        return SSMOp(T=d["T"], H=d["H"], hd=d["hd"], N=d["N"])
+        return SSMOp(T=d["T"], H=d["H"], hd=d["hd"], N=d["N"],
+                     mode=d.get("mode", default_mode("ssm")))
     raise ValueError(f"unknown op kind {d['kind']!r}")
 
 
@@ -97,8 +104,10 @@ def op_label(op: Op) -> str:
                 f"K{op.K} S{op.S}")
     if kind == "attention":
         win = f" W{op.window}" if op.window else ""
-        return f"attention H{op.H}/kv{op.KV} hd{op.hd} S{op.S}{win}"
-    return f"ssm T{op.T} H{op.H} hd{op.hd} N{op.N}"
+        tail = "" if op.mode == default_mode(kind) else f" [{op.mode}]"
+        return f"attention H{op.H}/kv{op.KV} hd{op.hd} S{op.S}{win}{tail}"
+    tail = "" if op.mode == default_mode(kind) else f" [{op.mode}]"
+    return f"ssm T{op.T} H{op.H} hd{op.hd} N{op.N}{tail}"
 
 
 # ------------------------------------------------------- shape contracts
@@ -151,7 +160,8 @@ def _attn_output_shape(op: AttnOp) -> Tuple[int, ...]:
 
 def _attn_base_features(op: AttnOp) -> List[float]:
     return [op.H, op.S, op.KV, op.hd, op.window,
-            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
+            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1)),
+            float(_ATTN_MODES.index(op.mode))]
 
 
 def _ssm_input_shape(op: SSMOp) -> Tuple[int, ...]:
@@ -170,7 +180,8 @@ def _ssm_output_shape(op: SSMOp) -> Tuple[int, ...]:
 
 def _ssm_base_features(op: SSMOp) -> List[float]:
     return [op.T, op.H, op.hd, op.N,
-            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1))]
+            math.log(max(op.flops, 1)), math.log(max(op.weight_bytes, 1)),
+            float(_SSM_MODES.index(op.mode))]
 
 
 def _fan_in(op: Op) -> int:
@@ -181,6 +192,128 @@ def _fan_in(op: Op) -> int:
     if isinstance(op, AttnOp):
         return op.hd                    # keeps qk scores O(1) pre-softmax
     return op.N
+
+
+# ------------------------------------------------------- partition axes
+
+#: per-kind kernel modes; the first entry is the default (and the one
+#: implied by mode-less plan JSON, keeping pre-mode caches byte-stable)
+_ATTN_MODES = ("streaming", "materialized")
+_SSM_MODES = ("chunked", "recurrent")
+
+#: minimum cache length before a kv-block split is offered — short caches
+#: stay on the bit-identical head-split/unsplit paths (the log-sum-exp
+#: merge of a kv-block split is only tolerance-exact)
+KV_BLOCK_MIN_S = 256
+
+#: SSM head slices must land the output-channel boundary (h * hd) on the
+#: lane tile, or the stacked two-group layout can't align its halves
+SSM_LANE_ALIGN = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """A typed partition axis of an op kind.
+
+    ``size`` counts the natural units along the axis (query heads, cache
+    positions, state heads); splits place ``n`` units on the fast side and
+    ``size - n`` on the slow side, and must be multiples of
+    ``granularity`` (e.g. whole GQA groups).  ``sub`` builds the sub-op a
+    side computes.  ``stackable`` axes produce contiguous output-channel
+    blocks and reuse the channel-split gather/chaining machinery; a
+    non-stackable axis (kv-block) merges partial results inside its own
+    lowering and is always materialized.
+    """
+
+    axis: str
+    size: Callable[[Op], int]
+    granularity: Callable[[Op], int]
+    sub: Callable[[Op, int], Op]
+    stackable: bool = True
+    #: output channels contributed per axis unit (stackable axes only)
+    unit_channels: Callable[[Op], int] = lambda op: 0
+    #: whether the axis is offered for this op at all
+    available: Callable[[Op], bool] = lambda op: True
+
+
+def _attn_head_axis() -> AxisSpec:
+    return AxisSpec(
+        axis="head",
+        size=lambda op: op.H,
+        granularity=lambda op: op.H // op.KV,        # whole GQA groups
+        sub=lambda op, n: op.with_heads(n),
+        stackable=True,
+        unit_channels=lambda op: op.hd,
+        available=lambda op: op.KV >= 2,             # need >=2 GQA groups
+    )
+
+
+def _attn_kv_block_axis() -> AxisSpec:
+    return AxisSpec(
+        axis="kv-block",
+        size=lambda op: op.S,
+        granularity=lambda op: max(16, op.S // 8),
+        sub=lambda op, n: op.with_cache(n),
+        stackable=False,
+        # sliding-window masks depend on absolute cache positions and do
+        # not slice cleanly into blocks; keep windowed ops off this axis
+        available=lambda op: op.S >= KV_BLOCK_MIN_S and op.window == 0,
+    )
+
+
+def _ssm_state_axis() -> AxisSpec:
+    return AxisSpec(
+        axis="ssm-state",
+        size=lambda op: op.H,
+        granularity=lambda op: 1,
+        sub=lambda op, n: op.with_heads(n),
+        stackable=True,
+        unit_channels=lambda op: op.hd,
+        available=lambda op: op.H >= 2 and op.hd % SSM_LANE_ALIGN == 0,
+    )
+
+
+def axes_for(op: Op) -> List[AxisSpec]:
+    """The partition axes offered for this specific op (availability
+    predicates applied — e.g. no kv-block axis for short caches)."""
+    return [a for a in entry_for(op).axes if a.available(op)]
+
+
+def axis_spec(kind: str, axis: str) -> AxisSpec:
+    for a in get(kind).axes:
+        if a.axis == axis:
+            return a
+    raise KeyError(f"kind {kind!r} has no partition axis {axis!r}")
+
+
+def default_mode(kind: str) -> str:
+    modes = get(kind).modes
+    return modes[0] if modes else ""
+
+
+def validate_axis_split(op: Op, axis: str, n_fast: int) -> AxisSpec:
+    """Reject splits the executor cannot lower — GQA-group-violating head
+    splits, misaligned SSM state splits, out-of-range boundaries.  Raises
+    ValueError; the planner's candidate enumeration and the plan codec both
+    route through here so an illegal split can never reach a schedule."""
+    spec = axis_spec(op_kind(op), axis)
+    size = spec.size(op)
+    if not 0 <= n_fast <= size:
+        raise ValueError(f"{axis} split {n_fast} out of range 0..{size} "
+                         f"for {op_label(op)}")
+    if 0 < n_fast < size:
+        if not spec.available(op):
+            raise ValueError(f"axis {axis!r} unavailable for {op_label(op)}")
+        g = spec.granularity(op)
+        if n_fast % g:
+            raise ValueError(
+                f"{axis} split {n_fast} breaks granularity {g} "
+                f"(GQA groups / block size) for {op_label(op)}")
+        if (axis == "ssm-state" and op.hd % SSM_LANE_ALIGN):
+            raise ValueError(
+                f"ssm-state split needs hd % {SSM_LANE_ALIGN} == 0, "
+                f"got hd={op.hd}")
+    return spec
 
 
 # --------------------------------------------------------------- entries
@@ -208,9 +341,15 @@ class KernelEntry:
     output_shape: Callable[[Op], Tuple[int, ...]]
     base_features: Callable[[Op], List[float]]
     #: whether the partitioner may split the op's output channels across
-    #: CPU and GPU (the paper's conv/linear domain); non-splittable kinds
-    #: (attention, ssm) are scheduled exclusively and charged analytically
+    #: CPU and GPU (the paper's conv/linear domain); kinds with
+    #: ``splittable=False`` partition along their typed ``axes`` instead
     splittable: bool = True
+    #: typed partition axes beyond the channel axis (attention: head /
+    #: kv-block; ssm: ssm-state); empty for the channel-split kinds
+    axes: Tuple[AxisSpec, ...] = ()
+    #: kernel modes the planner may choose between; first entry is the
+    #: default (empty for kinds without a mode dimension)
+    modes: Tuple[str, ...] = ()
 
     def init_weight(self, op: Op, rng: np.random.Generator) -> np.ndarray:
         """Seeded fan-in-scaled weights (keeps deep chains O(1) magnitude,
@@ -246,6 +385,8 @@ _ENTRIES: Dict[str, KernelEntry] = {
         output_shape=_attn_output_shape,
         base_features=_attn_base_features,
         splittable=False,
+        axes=(_attn_head_axis(), _attn_kv_block_axis()),
+        modes=_ATTN_MODES,
     ),
     "ssm": KernelEntry(
         kind="ssm",
@@ -254,6 +395,8 @@ _ENTRIES: Dict[str, KernelEntry] = {
         output_shape=_ssm_output_shape,
         base_features=_ssm_base_features,
         splittable=False,
+        axes=(_ssm_state_axis(),),
+        modes=_SSM_MODES,
     ),
 }
 
@@ -301,3 +444,46 @@ def get_lowering(kind: str) -> KernelLowering:
                 f"{_LOWERING_MODULES[kind]} did not register a lowering "
                 f"for {kind!r}")
     return _LOWERINGS[kind]
+
+
+# ----------------------------------------------------- split lowerings
+
+@dataclasses.dataclass(frozen=True)
+class SplitLowering:
+    """How a (kind, axis) pair co-executes across the two-group mesh.
+
+    ``pack(w, op, n_fast, mesh)`` -> (split_plan, packed_weights): the
+    per-side parameter layout (a channel-style SplitPlan for stackable
+    axes, so the executor's gather/chaining machinery applies unchanged).
+
+    ``run(x, packed, split, mesh, op, n_fast, *, gather, x_plan,
+    use_pallas, interpret)`` -> output (stacked or gathered, mirroring
+    coexec_matmul's contract).
+    """
+
+    pack: Callable[..., object]
+    run: Callable[..., object]
+
+
+_SPLIT_LOWERINGS: Dict[Tuple[str, str], SplitLowering] = {}
+
+
+def register_split_lowering(kind: str, axis: str, *, pack: Callable,
+                            run: Callable) -> SplitLowering:
+    """Called by kernels/*/ops.py at import time, next to its lowering."""
+    axis_spec(kind, axis)                      # raise on unknown (kind, axis)
+    low = SplitLowering(pack=pack, run=run)
+    _SPLIT_LOWERINGS[(kind, axis)] = low
+    return low
+
+
+def get_split_lowering(kind: str, axis: str) -> SplitLowering:
+    """Resolve a (kind, axis) split lowering, importing on demand."""
+    if (kind, axis) not in _SPLIT_LOWERINGS:
+        axis_spec(kind, axis)                  # raise on unknown (kind, axis)
+        importlib.import_module(_LOWERING_MODULES[kind])
+        if (kind, axis) not in _SPLIT_LOWERINGS:   # pragma: no cover
+            raise RuntimeError(
+                f"{_LOWERING_MODULES[kind]} did not register a split "
+                f"lowering for {kind!r}/{axis!r}")
+    return _SPLIT_LOWERINGS[(kind, axis)]

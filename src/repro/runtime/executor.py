@@ -272,12 +272,23 @@ class PlanExecutor:
                 self.params.append(jnp.asarray(w, dtype))
         # pre-split the co-executed weights once: (split, packed) per spec —
         # they depend only on (spec, mesh, params), and packing host-side
-        # inside the per-op stopwatch would contaminate the timings
+        # inside the per-op stopwatch would contaminate the timings.
+        # Channel splits pack the trailing weight dim; typed axes (head /
+        # kv-block / ssm-state) pack through their registered split
+        # lowering (per-side KV-head slices, cache-block slices, per-head
+        # parameter vectors)
         self._splits: List[Optional[Tuple[SplitPlan, jax.Array]]] = []
         for spec, w in zip(self.specs, self.params):
             if self.split_capable and spec.coexec:
-                split = split_for_mesh(spec.op.C_out, spec.c_fast, self.mesh)
-                self._splits.append((split, pack_weights(w, split)))
+                if spec.axis == "channel":
+                    split = split_for_mesh(spec.op.C_out, spec.c_fast,
+                                           self.mesh)
+                    self._splits.append(
+                        (split, pack_weights(w, split, self.mesh)))
+                else:
+                    low = registry.get_split_lowering(spec.unit, spec.axis)
+                    self._splits.append(
+                        low.pack(w, spec.op, spec.c_fast, self.mesh))
             else:
                 self._splits.append(None)
         self._input_seed = seed + 1
@@ -351,9 +362,10 @@ class PlanExecutor:
         the declared input shape equals the stack's logical shape exactly —
         any adaptation is a true boundary."""
         op = spec.op
-        if spec.unit == "linear":
-            return act.shape == (op.L, op.C_in)
-        return act.shape == (1, op.H_in, op.W_in, op.C_in)
+        if spec.unit == "conv":
+            return act.shape == (1, op.H_in, op.W_in, op.C_in)
+        # 2D (rows, channels) contracts: linear, attention, ssm
+        return act.shape == tuple(registry.get(spec.unit).input_shape(op))
 
     # ------------------------------------------------------------ segments
     def segment_programs(self, x_shape: Optional[Tuple[int, ...]] = None):
@@ -477,8 +489,8 @@ class PlanExecutor:
                     if spec.unit == "linear":
                         y = coexec_matmul(x_in, packed, split, self.mesh,
                                           gather=False, x_plan=x_plan)
-                        shape = (op.L, op.C_out)
-                    else:
+                        out = _Stacked(y, split, (op.L, op.C_out))
+                    elif spec.unit == "conv":
                         y = coexec_conv2d(x_in, packed, split, self.mesh,
                                           stride=op.S, gather=False,
                                           x_plan=x_plan)
@@ -486,10 +498,26 @@ class PlanExecutor:
                         # declared (floor) shape so chaining stays exact
                         y = y[:, :, :op.H_out, :op.W_out, :]
                         b = x_in.shape[1] if chained else x_in.shape[0]
-                        shape = (b, op.H_out, op.W_out, op.C_out)
-                    out = _Stacked(y, split, shape)
-                    if not chain:       # gather-every-op path: sync now
-                        out, r = self._materialize(out)
+                        out = _Stacked(y, split,
+                                       (b, op.H_out, op.W_out, op.C_out))
+                    else:       # typed axis: registered split lowering
+                        low = registry.get_split_lowering(spec.unit,
+                                                          spec.axis)
+                        y = low.run(x_in, packed, split, self.mesh, op,
+                                    spec.c_fast, gather=False,
+                                    x_plan=x_plan,
+                                    use_pallas=self.use_pallas,
+                                    interpret=self.interpret)
+                        if spec.axis == "kv-block":
+                            # non-stackable: the lowering merged its
+                            # softmax partials and materialized internally
+                            out = y
+                        else:
+                            shape = tuple(registry.get(
+                                spec.unit).output_shape(op))
+                            out = _Stacked(y, split, shape)
+                    if isinstance(out, _Stacked) and not chain:
+                        out, r = self._materialize(out)  # sync every op
                         reshard += r
                 else:
                     mode = "exclusive"
@@ -568,6 +596,17 @@ class PlanExecutor:
                 src_val = acts[sp.ext_inputs[0]]
                 if sp.modes[nid] == "pool":
                     out = self._pool(src_val, spec.pool_bytes)
+                elif sp.modes[nid] == "coexec":
+                    # typed-axis split: runs as an eager exclusive-segment
+                    # singleton so its shard_map program is the sole
+                    # compilation unit (fp32 bit-identity vs the oracle);
+                    # kv-block additionally merges/materializes internally
+                    split, packed = self._splits[pos[nid]]
+                    low = registry.get_split_lowering(spec.unit, spec.axis)
+                    out = low.run(self._adapt(src_val, spec), packed,
+                                  split, self.mesh, spec.op, spec.c_fast,
+                                  use_pallas=self.use_pallas,
+                                  interpret=self.interpret)
                 else:
                     out = self._dense(self._adapt(src_val, spec),
                                       self.params[pos[nid]], spec)

@@ -38,7 +38,8 @@ from repro.core.sync import SyncMechanism
 from repro.core.types import Op
 from repro.graph.ir import Graph, Segment, from_units
 from repro.kernels.registry import (op_from_json, op_kind,  # noqa: F401 —
-                                    op_label, op_to_json)   # re-exported
+                                    op_label, op_to_json,   # re-exported
+                                    validate_axis_split)
 
 PLAN_SCHEMA_VERSION = 1
 
@@ -47,17 +48,33 @@ PLANNER_PREDICTOR = "predictor"      # GBDT-driven (deployable path)
 PLANNER_GRID = "grid"                # measurement-driven oracle
 
 
+def _validate_decision(dec: PartitionDecision) -> PartitionDecision:
+    # both codec directions route through the registry's split validation,
+    # so an illegal typed split (GQA-violating head split, under-aligned
+    # state split) can neither enter a schedule nor load from a tampered
+    # or stale plan file
+    if dec.axis not in ("channel", "none"):
+        validate_axis_split(dec.op, dec.axis, dec.c_gpu)
+    return dec
+
+
 def decision_to_json(dec: PartitionDecision) -> Dict[str, Any]:
-    return {"op": op_to_json(dec.op), "c_cpu": dec.c_cpu, "c_gpu": dec.c_gpu,
-            "pred_cpu_us": dec.pred_cpu_us, "pred_gpu_us": dec.pred_gpu_us,
-            "pred_total_us": dec.pred_total_us}
+    _validate_decision(dec)
+    d = {"op": op_to_json(dec.op), "c_cpu": dec.c_cpu, "c_gpu": dec.c_gpu,
+         "pred_cpu_us": dec.pred_cpu_us, "pred_gpu_us": dec.pred_gpu_us,
+         "pred_total_us": dec.pred_total_us}
+    # the axis key is omitted for channel splits so pre-axis plan JSON
+    # (every conv/linear schedule ever written) stays byte-identical
+    if dec.axis != "channel":
+        d["axis"] = dec.axis
+    return d
 
 
 def decision_from_json(d: Dict[str, Any]) -> PartitionDecision:
-    return PartitionDecision(op=op_from_json(d["op"]), c_cpu=d["c_cpu"],
-                             c_gpu=d["c_gpu"], pred_cpu_us=d["pred_cpu_us"],
-                             pred_gpu_us=d["pred_gpu_us"],
-                             pred_total_us=d["pred_total_us"])
+    return _validate_decision(PartitionDecision(
+        op=op_from_json(d["op"]), c_cpu=d["c_cpu"], c_gpu=d["c_gpu"],
+        pred_cpu_us=d["pred_cpu_us"], pred_gpu_us=d["pred_gpu_us"],
+        pred_total_us=d["pred_total_us"], axis=d.get("axis", "channel")))
 
 
 # ------------------------------------------------------------- provenance
@@ -114,7 +131,15 @@ def predictor_checksum(*predictors) -> str:
                 h.update(kern.encode())
                 _hash_gbdt(h, p.models[kern])
         elif hasattr(p, "linear") and hasattr(p, "conv"):   # MuxPredictor
-            h.update(predictor_checksum(p.linear, p.conv).encode())
+            # decode-kind members are appended only when present, so
+            # conv/linear-only bundles keep their pre-axis checksums (and
+            # the on-disk plan caches keyed by them stay warm)
+            members = [p.linear, p.conv]
+            for extra in (getattr(p, "attention", None),
+                          getattr(p, "ssm", None)):
+                if extra is not None:
+                    members.append(extra)
+            h.update(predictor_checksum(*members).encode())
         else:
             raise TypeError(f"cannot checksum predictor {type(p).__name__}")
     return h.hexdigest()
@@ -181,13 +206,15 @@ class ExecSpec:
 
     A `PartitionDecision` is a *planning* fact (what the predictors said);
     an ExecSpec is the runtime contract the executor consumes: which unit
-    kind to dispatch through the kernel registry, how many output channels
-    each co-execution group owns (`c_fast` = the GPU-analogue share,
-    `c_slow` = the CPU-analogue share), and the predicted latency the
-    fidelity report compares executed timings against.  Pool units carry
-    only their output bytes; add units carry nothing; attention/ssm units
-    carry their op with a forced exclusive placement.  `node_id` names the
-    graph node the spec lowers and `segment` its segment-partition index
+    kind to dispatch through the kernel registry, the partition `axis`,
+    how much of that axis each co-execution group owns (`c_fast` = the
+    GPU-analogue share, `c_slow` = the CPU-analogue share — output
+    channels on the channel axis, heads / cache positions on the typed
+    axes), and the predicted latency the fidelity report compares
+    executed timings against.  Pool units carry only their output bytes;
+    add units carry nothing; exclusive attention/ssm placements carry
+    their op with zero shares (axis "none").  `node_id` names the graph
+    node the spec lowers and `segment` its segment-partition index
     (metadata: both excluded from equality).
     """
 
@@ -197,6 +224,7 @@ class ExecSpec:
     c_fast: int = 0
     c_slow: int = 0
     pred_total_us: float = 0.0
+    axis: str = "channel"
     node_id: str = dataclasses.field(default="", compare=False)
     segment: int = dataclasses.field(default=-1, compare=False)
 
@@ -214,7 +242,7 @@ def decision_to_spec(dec: PartitionDecision, node_id: str = "") -> ExecSpec:
     group, CPU share -> slow group, mirroring the TPU transfer)."""
     return ExecSpec(unit=op_kind(dec.op), op=dec.op, c_fast=dec.c_gpu,
                     c_slow=dec.c_cpu, pred_total_us=dec.pred_total_us,
-                    node_id=node_id)
+                    axis=dec.axis, node_id=node_id)
 
 
 def spec_label(spec: ExecSpec) -> str:
@@ -311,12 +339,20 @@ class CoexecPlan:
         return g
 
     def coexec_node_ids(self) -> FrozenSet[str]:
-        """Ids of the co-executed (channel-split) nodes — the fusable set
-        the segment partition is computed over."""
+        """Ids of the co-executed *channel-split* nodes — the fusable set
+        the segment partition is computed over.  Typed-axis splits (head,
+        kv-block, ssm-state) co-execute but run as exclusive-segment
+        singletons: kv-block merges inside its own lowering with a
+        materialized output, and the head/state lowerings wrap nonlinear
+        kernels (softmax, the SSD recurrence) whose fp32 rounding depends
+        on the XLA fusion context — inlining them into a larger jitted
+        segment program would break bit-identity with the unsplit oracle,
+        so each stays its own compilation unit."""
         ids = []
         for nid, e in zip(self.node_ids(), self.schedule):
             d = e.get("decision")
-            if d is not None and d["c_cpu"] > 0 and d["c_gpu"] > 0:
+            if (d is not None and d["c_cpu"] > 0 and d["c_gpu"] > 0
+                    and d.get("axis") in (None, "channel")):
                 ids.append(nid)
         return frozenset(ids)
 
@@ -362,12 +398,12 @@ class CoexecPlan:
             elif "decision" in e:
                 out.append(decision_to_spec(
                     decision_from_json(e["decision"]), node_id=nid))
-            else:                       # attention / ssm: forced exclusive
+            else:                       # legacy attention / ssm: exclusive
                 out.append(ExecSpec(unit=e["unit"],
                                     op=op_from_json(e["op"]),
                                     pred_total_us=float(e.get("pred_us",
                                                               0.0)),
-                                    node_id=nid))
+                                    axis="none", node_id=nid))
         seg_of = self.segment_of()
         return [dataclasses.replace(s, segment=seg_of.get(s.node_id, -1))
                 for s in out]
@@ -459,10 +495,10 @@ def build_graph_schedule(graph: Graph,
                                      "bytes": int(node.pool_bytes)}
         elif node.kind == "add":
             entry = {"unit": "add"}
-        elif node.splittable:
+        elif node.id in decisions:
             entry = {"unit": node.kind,
                      "decision": decision_to_json(decisions[node.id])}
-        else:
+        else:                # no decision: legacy opaque exclusive-GPU node
             entry = {"unit": node.kind, "op": op_to_json(node.op),
                      "pred_us": float(opaque_us[node.id])}
         if not legacy:
@@ -479,7 +515,7 @@ def segments_json(graph: Graph,
     boundary contract, stored so `.explain()` and tooling can print it
     without re-deriving)."""
     coexec = {nid for nid, d in decisions.items()
-              if d.c_cpu > 0 and d.c_gpu > 0}
+              if d.c_cpu > 0 and d.c_gpu > 0 and d.axis == "channel"}
     return [{"kind": s.kind, "nodes": list(s.node_ids)}
             for s in graph.segments(coexec)]
 
@@ -531,12 +567,18 @@ def plan_from_report(units: Sequence[Unit], report: PlanReport, *,
 # --------------------------------------------------------------------- CLI
 
 def train_mux_predictors(device: str, threads: int, *, samples: int = 400,
-                         estimators: int = 60):
+                         estimators: int = 60,
+                         kinds: Sequence[str] = ("linear", "conv")):
     """Train the (cpu, gpu) MuxPredictor pair the planning/executor CLIs
     use.  Deterministic (fixed data seeds), so two CLI invocations with the
     same knobs produce checksum-identical predictors — which is what lets
-    the executor CLI warm-hit a plan the plan CLI compiled."""
-    from repro.core.predictor import (sample_conv_ops, sample_linear_ops,
+    the executor CLI warm-hit a plan the plan CLI compiled.
+
+    `kinds` adds optional decode-kind members ("attention", "ssm") on top
+    of the always-present linear/conv pair; conv/linear-only bundles keep
+    the pre-decode checksum."""
+    from repro.core.predictor import (sample_attn_ops, sample_conv_ops,
+                                      sample_linear_ops, sample_ssm_ops,
                                       train_predictor)
     from repro.core.predictor.gbdt import GBDTParams
     from repro.core.predictor.train import MuxPredictor
@@ -552,6 +594,20 @@ def train_mux_predictors(device: str, threads: int, *, samples: int = 400,
                         whitebox=False, params=params),
         train_predictor(ct, device, f"cpu{threads}",
                         whitebox=False, params=params))
+    # decode kinds have no dispatch-table white-box features yet: both
+    # backends train black-box on the configuration (+ mode index)
+    if "attention" in kinds:
+        at = sample_attn_ops(samples, seed=1)
+        gp.attention = train_predictor(at, device, "gpu",
+                                       whitebox=False, params=params)
+        cp.attention = train_predictor(at, device, f"cpu{threads}",
+                                       whitebox=False, params=params)
+    if "ssm" in kinds:
+        st = sample_ssm_ops(samples, seed=1)
+        gp.ssm = train_predictor(st, device, "gpu",
+                                 whitebox=False, params=params)
+        cp.ssm = train_predictor(st, device, f"cpu{threads}",
+                                 whitebox=False, params=params)
     return cp, gp
 
 

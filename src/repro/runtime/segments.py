@@ -41,6 +41,7 @@ import jax
 from repro.core.coexec import (coexec_conv2d, coexec_matmul,
                                gather_stacked_traced)
 from repro.graph.ir import SEGMENT_FUSED, SEGMENT_POOL
+from repro.kernels import registry
 
 
 @dataclasses.dataclass
@@ -144,10 +145,11 @@ def compile_segments(exe, x_shape: Tuple[int, ...]) -> List[SegmentProgram]:
             ch = False
             if do_split and src in stacked:
                 lsh = stacked[src][1]
-                if spec.unit == "linear":
-                    ch = tuple(lsh) == (op.L, op.C_in)
-                else:
+                if spec.unit == "conv":
                     ch = tuple(lsh) == (1, op.H_in, op.W_in, op.C_in)
+                else:    # 2D contracts: linear, attention, ssm
+                    ch = tuple(lsh) == tuple(
+                        registry.get(spec.unit).input_shape(op))
                 ch = ch and len(graph.consumers(src)) == 1
             if ch:
                 _, lsh = stacked.pop(src)
@@ -162,11 +164,13 @@ def compile_segments(exe, x_shape: Tuple[int, ...]) -> List[SegmentProgram]:
                 weights.append(packed)
                 if spec.unit == "linear":
                     out_l: Tuple[int, ...] = (op.L, op.C_out)
-                else:
+                elif spec.unit == "conv":
                     b = (in_shape[0] if ch else
                          _eval_shape(lambda v: exe._adapt(v, spec),
                                      in_shape, dtype)[0])
                     out_l = (b, op.H_out, op.W_out, op.C_out)
+                else:    # head-/state-split attention, ssm
+                    out_l = tuple(registry.get(spec.unit).output_shape(op))
                 stacked[nid] = (split, out_l)
                 modes[nid] = "coexec"
                 instrs.append({"id": nid, "kind": "op", "mode": "coexec",
@@ -216,6 +220,12 @@ def _layout_singleton(exe, index: int, seg, plain_shape) -> SegmentProgram:
         mode = "pool"
         out_shape = _eval_shape(lambda v: exe._pool(v, spec.pool_bytes),
                                 plain_shape[src], exe.dtype)
+    elif exe.split_capable and spec.coexec:
+        # typed-axis split (head / kv-block / ssm-state): co-executes, but
+        # outside fused segments — each lowering stays its own compilation
+        # unit so XLA fusion context cannot perturb fp32 rounding
+        mode = "coexec"
+        out_shape = tuple(registry.get(spec.unit).output_shape(spec.op))
     else:
         mode = "exclusive"
         w = exe.params[i]
@@ -273,12 +283,20 @@ def _emit(exe, instrs: List[Dict[str, Any]],
                     if spec.unit == "linear":
                         y = coexec_matmul(x_in, packed, split, mesh,
                                           gather=False, x_plan=x_plan)
-                    else:
+                    elif spec.unit == "conv":
                         y = coexec_conv2d(x_in, packed, split, mesh,
                                           stride=op.S, gather=False,
                                           x_plan=x_plan)
                         # SAME conv rounds up; crop to the declared shape
                         y = y[:, :, :op.H_out, :op.W_out, :]
+                    else:    # head-/state-split attention, ssm
+                        low = registry.get_split_lowering(spec.unit,
+                                                          spec.axis)
+                        y = low.run(x_in, packed, split, mesh, op,
+                                    spec.c_fast, gather=False,
+                                    x_plan=x_plan,
+                                    use_pallas=exe.use_pallas,
+                                    interpret=exe.interpret)
                     out = _Stacked(y, split, ins["shape"])
                 else:
                     out = exe._dense(exe._adapt(plain(ins["src"]), spec),
