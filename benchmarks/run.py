@@ -35,6 +35,7 @@ SUITES = {
     "roofline": "benchmarks.roofline_report",
     "calibration": "benchmarks.calibration_bench",
     "decode_bench": "benchmarks.decode_bench",
+    "serving_bench": "benchmarks.serving_bench",
 }
 
 

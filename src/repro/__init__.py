@@ -24,6 +24,9 @@ _EXPORTS = {
     "compile": "repro.api",
     "MODE_PREDICTED": "repro.api",
     "MODE_GRID": "repro.api",
+    "Bucket": "repro.api",
+    "PlanPortfolio": "repro.api",
+    "compile_portfolio": "repro.api",
     "optimal_partition": "repro.api",        # deprecated shim (warns once)
     "grid_search_partition": "repro.api",    # deprecated shim (warns once)
 }

@@ -233,8 +233,8 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             cache: Union[PlanCache, str, Path] = DEFAULT_CACHE_DIR,
             predictors=None,
             samples: int = 400, estimators: int = 60,
-            predictor_cache: Optional[Union[str, Path]] = None
-            ) -> "CompiledNetwork":
+            predictor_cache: Optional[Union[str, Path]] = None,
+            bucket: str = "") -> "CompiledNetwork":
     """Compile a network into a `CompiledNetwork` (cached planning).
 
     * `network` — a `repro.graph.Graph`, a registered name ("resnet18",
@@ -252,7 +252,10 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
 
     Provenance is identical to the underlying cached planners, so plans
     compiled here warm-hit entries written by pre-facade callers and vice
-    versa.
+    versa.  `bucket` tags the plan with a serving (batch, seq) bucket —
+    folded into the provenance digest so portfolio entries get their own
+    cache files (see `compile_portfolio`); only graph plans in
+    "predicted" mode accept it.
     """
     if not isinstance(target, Target):
         raise TypeError(f"target must be a repro.Target, "
@@ -261,6 +264,10 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
         raise ValueError(f"unknown mode {mode!r}; "
                          f"choices: ['predicted', 'grid']")
     graph_or_ops, is_graph = _resolve_graph(network)
+    if bucket and (mode != MODE_PREDICTED or not is_graph):
+        raise ValueError("bucket= requires a graph network in "
+                         "mode='predicted' (portfolio entries must be "
+                         "replannable)")
     if not isinstance(cache, PlanCache):
         cache = PlanCache(Path(cache))
     mech = target.sync_mechanism
@@ -302,7 +309,7 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             plan = plan_graph_cached(
                 graph_or_ops, cpu_pred, gpu_pred, threads=target.threads,
                 mechanism=mech, step=target.step, seed=target.seed,
-                cache=cache)
+                bucket=bucket, cache=cache)
         else:
             plan = partition_ops_plan_cached(
                 graph_or_ops, cpu_pred, gpu_pred,
@@ -604,6 +611,190 @@ class CompiledNetwork:
     @staticmethod
     def load(path: Union[str, Path]) -> "CompiledNetwork":
         return CompiledNetwork.from_json(json.loads(Path(path).read_text()))
+
+
+# ---------------------------------------------------------- plan portfolio
+
+PORTFOLIO_FORMAT = "repro.plan_portfolio"
+PORTFOLIO_VERSION = 1
+
+#: default (batch, seq) buckets for `compile_portfolio`
+DEFAULT_BUCKETS = ((1, 64), (4, 64), (4, 256))
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One (batch, seq) serving shape a portfolio holds a plan for.
+
+    Ordering is lexicographic (batch, then seq) — `select` relies on it
+    to pick the *smallest* bucket that covers a step."""
+
+    batch: int
+    seq: int
+
+    @property
+    def tag(self) -> str:
+        """The provenance tag folded into the plan digest."""
+        return f"b{self.batch}s{self.seq}"
+
+    def covers(self, batch: int, seq: int) -> bool:
+        return self.batch >= batch and self.seq >= seq
+
+
+class PlanPortfolio:
+    """One compiled plan per (batch, seq) bucket — the serving scheduler's
+    plan source.
+
+    `select(batch, seq)` returns the smallest bucket that covers the
+    step's live shape (falling back to the largest bucket when nothing
+    covers it) together with its `CompiledNetwork`; the compiled
+    network's memoized executor makes repeated selections free.
+    `replace()` swaps one bucket's entry in place — the drift-triggered
+    replan path.  Serializes like `CompiledNetwork` (one checksummed
+    JSON document embedding every entry); loaded portfolios carry no
+    predictors, so they can serve but not replan.
+    """
+
+    def __init__(self, model: str, target: Target,
+                 entries: Dict[Bucket, "CompiledNetwork"], *,
+                 mode: str = MODE_PREDICTED):
+        if not entries:
+            raise ValueError("a portfolio needs at least one bucket")
+        self.model = model
+        self.target = target
+        self.mode = mode
+        self.entries = dict(sorted(entries.items()))
+
+    @property
+    def buckets(self) -> List[Bucket]:
+        return list(self.entries)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __repr__(self) -> str:
+        tags = ",".join(b.tag for b in self.buckets)
+        return (f"PlanPortfolio(model={self.model!r}, "
+                f"device={self.target.device!r}, buckets=[{tags}])")
+
+    def select(self, batch: int, seq: int
+               ) -> Tuple[Bucket, "CompiledNetwork"]:
+        """Smallest bucket covering (batch, seq); the largest bucket when
+        none covers (an oversized step is served by the biggest plan
+        rather than refused)."""
+        for b in self.buckets:                   # sorted ascending
+            if b.covers(batch, seq):
+                return b, self.entries[b]
+        b = self.buckets[-1]
+        return b, self.entries[b]
+
+    def replace(self, bucket: Bucket,
+                compiled: "CompiledNetwork") -> None:
+        """Swap one bucket's compiled plan in place (post-replan)."""
+        if bucket not in self.entries:
+            raise KeyError(f"unknown bucket {bucket.tag}")
+        self.entries[bucket] = compiled
+
+    def can_replan(self) -> bool:
+        """Whether entries carry predictors (in-process compiles do;
+        artifacts loaded from disk do not)."""
+        return all(c.predictors is not None for c in self.entries.values())
+
+    # ------------------------------------------------------------- codecs
+    def to_json(self) -> Dict[str, Any]:
+        doc = {"format": PORTFOLIO_FORMAT, "version": PORTFOLIO_VERSION,
+               "model": self.model, "mode": self.mode,
+               "target": self.target.to_json(),
+               "entries": [{"batch": b.batch, "seq": b.seq,
+                            "artifact": c.to_json()}
+                           for b, c in self.entries.items()]}
+        doc["checksum"] = _portfolio_checksum(doc)
+        return doc
+
+    @staticmethod
+    def from_json(doc: Dict[str, Any]) -> "PlanPortfolio":
+        if doc.get("format") != PORTFOLIO_FORMAT:
+            raise ValueError(f"not a {PORTFOLIO_FORMAT} artifact "
+                             f"(format={doc.get('format')!r})")
+        if doc.get("version") != PORTFOLIO_VERSION:
+            raise ValueError(f"unsupported portfolio version "
+                             f"{doc.get('version')!r}")
+        if doc.get("checksum") != _portfolio_checksum(doc):
+            raise ValueError("portfolio checksum mismatch: the file was "
+                             "modified after it was saved")
+        entries = {
+            Bucket(e["batch"], e["seq"]):
+                CompiledNetwork.from_json(e["artifact"])
+            for e in doc["entries"]}
+        return PlanPortfolio(model=doc["model"],
+                             target=Target.from_json(doc["target"]),
+                             entries=entries, mode=doc["mode"])
+
+    def save(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1))
+        return path
+
+    @staticmethod
+    def load(path: Union[str, Path]) -> "PlanPortfolio":
+        return PlanPortfolio.from_json(json.loads(Path(path).read_text()))
+
+
+def _portfolio_checksum(doc: Dict[str, Any]) -> str:
+    body = {k: doc.get(k) for k in ("format", "version", "model", "mode",
+                                    "target", "entries")}
+    blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.blake2b(blob.encode(), digest_size=16).hexdigest()
+
+
+def compile_portfolio(model, target: Target, *,
+                      buckets: Sequence[Tuple[int, int]] = DEFAULT_BUCKETS,
+                      blocks: int = 1,
+                      cache: Union[PlanCache, str, Path] = DEFAULT_CACHE_DIR,
+                      predictors=None,
+                      samples: int = 400, estimators: int = 60,
+                      predictor_cache: Optional[Union[str, Path]] = None
+                      ) -> PlanPortfolio:
+    """Compile one `CoexecPlan` per (batch, seq) bucket of a model graph.
+
+    `model` is a model-graph name or `ModelConfig` (`tiny_decoder`,
+    "gemma3-12b", ... — legacy unit networks have no batch/seq knobs).
+    Each bucket lowers through `graph.from_model(model, blocks=blocks,
+    cache_len=seq, batch=batch)` and compiles through the ordinary cached
+    path with the bucket tag folded into provenance — recompiling the
+    same portfolio in another process is all warm cache hits.  The
+    predictor pair is trained (or loaded) once and shared across buckets.
+    """
+    from repro.graph.frontends import from_model, resolve_config
+    cfg = resolve_config(model)
+    seen = set()
+    parsed: List[Bucket] = []
+    for batch, seq in buckets:
+        b = Bucket(int(batch), int(seq))
+        if b.batch < 1 or b.seq < 1:
+            raise ValueError(f"bucket {b.tag}: batch and seq must be >= 1")
+        if b in seen:
+            raise ValueError(f"duplicate bucket {b.tag}")
+        seen.add(b)
+        parsed.append(b)
+    if predictors is None:
+        kinds: Tuple[str, ...] = ("linear", "conv")
+        probe = from_model(cfg, blocks=blocks, cache_len=parsed[0].seq,
+                           batch=parsed[0].batch)
+        kinds += tuple(sorted({n.kind for n in probe if n.op is not None
+                               and n.kind in ("attention", "ssm")}))
+        predictors = _trained_mux_predictors(
+            target.device, target.threads, samples=samples,
+            estimators=estimators, cache_dir=predictor_cache, kinds=kinds)
+    entries = {}
+    for b in parsed:
+        graph = from_model(cfg, blocks=blocks, cache_len=b.seq,
+                           batch=b.batch)
+        entries[b] = compile(graph, target, mode=MODE_PREDICTED,
+                             cache=cache, predictors=predictors,
+                             bucket=b.tag)
+    return PlanPortfolio(model=cfg.name, target=target, entries=entries)
 
 
 # ------------------------------------------------------------- deprecation

@@ -11,7 +11,10 @@ Subcommands:
                   `Calibrator`, replan with corrected predictors, and
                   print the plan diff.
   * `bench`     — forward to the paper benchmark driver (`benchmarks.run`).
-  * `serve`     — forward to the serving launcher (`repro.launch.serve`).
+  * `serve`     — forward to the serving launcher (`repro.launch.serve`):
+                  the fixed-batch engine, or — with `--arrivals poisson
+                  --portfolio ...` — the continuous scheduler over a
+                  bucketed plan portfolio with drift-triggered replanning.
 
 `plan` and `execute` are thin clients of `repro.compile`; their provenance
 (and therefore their on-disk cache entries) is bit-identical to the
@@ -329,8 +332,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="run paper benchmark suites (forwards to "
                         "benchmarks.run; e.g. --only tab3)")
     sub.add_parser("serve",
-                   help="serve batched requests (forwards to "
-                        "repro.launch.serve; e.g. --arch gemma3_12b)")
+                   help="serve requests: fixed-batch engine, or continuous "
+                        "scheduler with a plan portfolio (--arrivals "
+                        "poisson --rate ... --portfolio ...); forwards to "
+                        "repro.launch.serve")
 
     args = ap.parse_args(argv)
     try:

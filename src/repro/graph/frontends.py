@@ -68,24 +68,24 @@ def resolve_config(name_or_config: Union[str, ModelConfig]) -> ModelConfig:
 
 
 def _attention_block(prev: str, i: int, cfg: ModelConfig, cache_len: int,
-                     nodes: List[Node]) -> str:
+                     batch: int, nodes: List[Node]) -> str:
     d = cfg.d_model
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     window = cfg.sliding_window or 0
     nodes += [
         Node(id=f"b{i}.q_proj", kind="linear",
-             op=LinearOp(1, d, h * hd), inputs=(prev,)),
+             op=LinearOp(batch, d, h * hd), inputs=(prev,)),
         Node(id=f"b{i}.attn", kind="attention",
              op=AttnOp(H=h, S=cache_len, KV=kv, hd=hd, window=window),
              inputs=(f"b{i}.q_proj",)),
         Node(id=f"b{i}.o_proj", kind="linear",
-             op=LinearOp(1, h * hd, d), inputs=(f"b{i}.attn",)),
+             op=LinearOp(batch, h * hd, d), inputs=(f"b{i}.attn",)),
         Node(id=f"b{i}.attn_res", kind="add",
              inputs=(prev, f"b{i}.o_proj")),
         Node(id=f"b{i}.mlp_up", kind="linear",
-             op=LinearOp(1, d, cfg.d_ff), inputs=(f"b{i}.attn_res",)),
+             op=LinearOp(batch, d, cfg.d_ff), inputs=(f"b{i}.attn_res",)),
         Node(id=f"b{i}.mlp_down", kind="linear",
-             op=LinearOp(1, cfg.d_ff, d), inputs=(f"b{i}.mlp_up",)),
+             op=LinearOp(batch, cfg.d_ff, d), inputs=(f"b{i}.mlp_up",)),
         Node(id=f"b{i}.mlp_res", kind="add",
              inputs=(f"b{i}.attn_res", f"b{i}.mlp_down")),
     ]
@@ -93,21 +93,22 @@ def _attention_block(prev: str, i: int, cfg: ModelConfig, cache_len: int,
 
 
 def _ssm_block(prev: str, i: int, cfg: ModelConfig, tokens: int,
-               nodes: List[Node]) -> str:
+               batch: int, nodes: List[Node]) -> str:
     d = cfg.d_model
     d_in = cfg.ssm_expand * d
     hd = cfg.ssm_head_dim or 64
     heads = max(1, d_in // hd)
     d_in = heads * hd                     # re-align to whole heads
     n = cfg.ssm_state or 16
+    rows = tokens * batch
     nodes += [
         Node(id=f"b{i}.in_proj", kind="linear",
-             op=LinearOp(tokens, d, d_in), inputs=(prev,)),
+             op=LinearOp(rows, d, d_in), inputs=(prev,)),
         Node(id=f"b{i}.ssm", kind="ssm",
              op=SSMOp(T=tokens, H=heads, hd=hd, N=n),
              inputs=(f"b{i}.in_proj",)),
         Node(id=f"b{i}.out_proj", kind="linear",
-             op=LinearOp(tokens, d_in, d), inputs=(f"b{i}.ssm",)),
+             op=LinearOp(rows, d_in, d), inputs=(f"b{i}.ssm",)),
         Node(id=f"b{i}.res", kind="add",
              inputs=(prev, f"b{i}.out_proj")),
     ]
@@ -116,7 +117,7 @@ def _ssm_block(prev: str, i: int, cfg: ModelConfig, tokens: int,
 
 def from_model(name_or_config: Union[str, ModelConfig], *,
                blocks: int = 1, cache_len: int = 128,
-               tokens: int = 1) -> Graph:
+               tokens: int = 1, batch: int = 1) -> Graph:
     """Build a decoder-block graph for one decode step of a model config.
 
     * `blocks` — decoder blocks to chain (default 1: the per-block
@@ -126,20 +127,28 @@ def from_model(name_or_config: Union[str, ModelConfig], *,
     * `tokens` — tokens scanned per step by SSM blocks (1 = pure decode;
       larger values model chunked prefill, where the scan is long enough
       for a state-split to pay for its sync).
+    * `batch` — decode sequences per step (serving buckets).  Batch rows
+      fold into the row dimension of every projection — the splittable,
+      latency-dominant work — while attention/ssm nodes stay charged
+      per-sequence (their typed ops carry no batch axis; the exclusive
+      kernel cost scales linearly and does not move split decisions).
 
     The entry node is a shared embedding-row projection (splittable), so
-    every graph has a well-defined (1, d_model) input contract.  The
-    resulting graph passes strict `check_shapes()`.
+    every graph has a well-defined (batch, d_model) input contract.  The
+    resulting graph passes strict `check_shapes()`.  Distinct (batch,
+    cache_len) buckets produce distinct content-addressed fingerprints,
+    so a plan portfolio's entries never alias in the plan cache.
     """
     cfg = resolve_config(name_or_config)
     tokens = max(1, tokens)
+    batch = max(1, batch)
     if tokens > 1 and (not cfg.ssm_kind or cfg.attn_every):
         raise ValueError(
             "tokens > 1 (chunked prefill) is only modeled for pure-SSM "
             "configs; attention blocks decode one position at a time")
     d = cfg.d_model
     nodes: List[Node] = [
-        Node(id="embed", kind="linear", op=LinearOp(tokens, d, d),
+        Node(id="embed", kind="linear", op=LinearOp(tokens * batch, d, d),
              inputs=()),
     ]
     prev = "embed"
@@ -151,9 +160,9 @@ def from_model(name_or_config: Union[str, ModelConfig], *,
         else:
             is_attn = True
         if is_attn and cfg.attn_kind != "none":
-            prev = _attention_block(prev, i, cfg, cache_len, nodes)
+            prev = _attention_block(prev, i, cfg, cache_len, batch, nodes)
         else:
-            prev = _ssm_block(prev, i, cfg, tokens, nodes)
+            prev = _ssm_block(prev, i, cfg, tokens, batch, nodes)
     graph = Graph(nodes)
     graph.check_shapes()
     return graph

@@ -8,7 +8,9 @@ keyed by the same provenance digests as the plan cache) accumulates them;
 a `Calibrator` fits per-(op-kind, mode) affine corrections and wraps any
 latency predictor without retraining (`CalibratedPredictor`); `replan`
 re-runs the cached planners under the corrections and diffs the plans
-(`PlanDiff`).  Facade spellings: `CompiledNetwork.record() /
+(`PlanDiff`); a `DriftMonitor` watches windowed fidelity drift with
+hysteresis and fires the in-place replan trigger the serving scheduler
+consumes.  Facade spellings: `CompiledNetwork.record() /
 recalibrate() / replan()` and `python -m repro calibrate`.
 
 Exports resolve lazily (PEP 562), and nothing in this package imports
@@ -30,6 +32,8 @@ _EXPORTS = {
     "CalibratedPredictor": "repro.measure.calibrate",
     "Calibrator": "repro.measure.calibrate",
     "fidelity_error": "repro.measure.calibrate",
+    "DriftMonitor": "repro.measure.drift",
+    "windowed_drift": "repro.measure.drift",
     "DecisionChange": "repro.measure.replan",
     "PlanDiff": "repro.measure.replan",
     "diff_plans": "repro.measure.replan",

@@ -65,11 +65,19 @@ class AffineCorrection:
         return np.where(p > 0.0, out, 0.0)
 
 
+#: minimum spread of the log-predictions (≈ a 1.65x ratio between the
+#: cheapest and dearest fitted op) before the affine candidate is allowed:
+#: on a tighter cluster the slope is unidentifiable — least-squares can
+#: beat the shift *on the fitted records* with an extreme slope that then
+#: extrapolates catastrophically to the planner's unseen candidate splits
+MIN_AFFINE_SPREAD = 0.5
+
+
 def _fit_group(logp: np.ndarray, logw: np.ndarray) -> AffineCorrection:
     """Best of {identity, L1-optimal shift, least-squares affine} by summed
     absolute log-residual — never worse than no correction."""
     cands = [(1.0, 0.0), (1.0, float(np.median(logw - logp)))]
-    if len(logp) >= 3 and float(np.ptp(logp)) > 1e-9:
+    if len(logp) >= 3 and float(np.ptp(logp)) > MIN_AFFINE_SPREAD:
         A = np.vstack([logp, np.ones_like(logp)]).T
         coef, *_ = np.linalg.lstsq(A, logw, rcond=None)
         cands.append((float(coef[0]), float(coef[1])))
@@ -158,6 +166,27 @@ class Calibrator:
         """Calibrated fidelity error of `records` (see `fidelity_error`)."""
         return fidelity_error(records, self)
 
+    def compose(self, inner: Optional["Calibrator"]) -> "Calibrator":
+        """`self ∘ inner`: the calibrator equivalent to applying `inner`
+        first, then `self` — affine-in-log corrections compose to affine.
+
+        This is what *re*-calibration needs: records measured under a
+        plan that already embeds `inner` carry `pred_us = inner(raw)`, so
+        a calibrator fit from them maps inner-corrected predictions to
+        walls.  Applying that fit to the raw predictors (which is what
+        `wrap`/replanning does) silently drops `inner`; composing first
+        yields corrections valid on raw predictions.  `inner=None` is the
+        identity (a first calibration)."""
+        if inner is None:
+            return self
+        out: Dict[Tuple[str, str], AffineCorrection] = {}
+        for key in set(self.corrections) | set(inner.corrections):
+            o = self.corrections.get(key, AffineCorrection(1.0, 0.0, 0))
+            i = inner.corrections.get(key, AffineCorrection(1.0, 0.0, 0))
+            out[key] = AffineCorrection(a=o.a * i.a, b=o.a * i.b + o.b,
+                                        n=o.n or i.n)
+        return Calibrator(out, n_records=self.n_records)
+
     def wrap(self, predictor) -> "CalibratedPredictor":
         """Wrap any latency predictor (LatencyPredictor or MuxPredictor)
         with these corrections — no retraining.  Wrapping an already
@@ -231,6 +260,16 @@ class CalibratedPredictor:
     @property
     def device(self) -> str:
         return self.inner.device
+
+    def member(self, kind: str):
+        """Per-kind member lookup, forwarded from the wrapped bundle —
+        calibrating a `MuxPredictor` must not strip its ability to price
+        attention/SSM typed-axis candidates (the planner gates those on
+        `member(kind)`); returns None for plain per-kind predictors."""
+        inner_member = getattr(self.inner, "member", None)
+        if inner_member is None:
+            return None
+        return inner_member(kind)
 
     def predict(self, ops: Sequence[Op]) -> np.ndarray:
         ops = list(ops)

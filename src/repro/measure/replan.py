@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.partitioner import PartitionDecision
 from repro.core.sync import SyncMechanism, sync_overhead_us
+from repro.kernels import registry
 from repro.measure.calibrate import Calibrator
 from repro.runtime.cache import (PlanCache, partition_ops_plan_cached,
                                  plan_graph_cached)
@@ -31,18 +32,43 @@ from repro.runtime.plan import PLANNER_PREDICTOR, CoexecPlan, op_label
 def score_decisions(decisions: List[PartitionDecision], cpu_pred, gpu_pred,
                     *, mechanism: SyncMechanism) -> np.ndarray:
     """Price a decision list under (possibly calibrated) predictors —
-    the partitioner's objective, evaluated at fixed splits."""
+    the partitioner's objective, evaluated at fixed splits.
+
+    Channel decisions (conv/linear) are priced at their `with_cout`
+    sub-ops; typed-axis decisions (head / kv-block / ssm-state, and
+    exclusive `none` placements) at their `axis_side_ops` sub-ops, with
+    the same non-stackable merge surcharge `_axis_decide` charges — so a
+    replanned attention/SSM schedule is re-priced on the grid it was
+    chosen from."""
     if not decisions:
         return np.empty(0)
-    gpu_ops = [d.op.with_cout(d.c_gpu) for d in decisions]
-    cpu_ops = [d.op.with_cout(d.c_cpu) for d in decisions]
+    from repro.core.partitioner import axis_side_ops
+    from repro.core.simulator.devices import DEVICES
+    gpu_ops, cpu_ops, extra = [], [], []
+    for d in decisions:
+        if d.axis == "channel":
+            gpu_ops.append(d.op.with_cout(d.c_gpu))
+            cpu_ops.append(d.op.with_cout(d.c_cpu))
+            extra.append(0.0)
+        else:
+            g, c = axis_side_ops(d)
+            gpu_ops.append(g)
+            cpu_ops.append(c)
+            stackable = d.exclusive or d.axis == "none" or registry.axis_spec(
+                registry.op_kind(d.op), d.axis).stackable
+            extra.append(0.0 if stackable else 2.0 * d.op.output_bytes)
     c_gpu = np.array([d.c_gpu for d in decisions])
     c_cpu = np.array([d.c_cpu for d in decisions])
     t_gpu = np.where(c_gpu > 0, gpu_pred.predict(gpu_ops), 0.0)
     t_cpu = np.where(c_cpu > 0, cpu_pred.predict(cpu_ops), 0.0)
-    overhead = sync_overhead_us(gpu_pred.device, mechanism)
+    device = gpu_pred.device
+    overhead = sync_overhead_us(device, mechanism)
+    extra = np.asarray(extra)
+    merge_us = extra / (DEVICES[device].cpu_mem_gbps * 1e3)
+    merge_us = merge_us + np.where(extra > 0.0, overhead, 0.0)
     coexec = (c_gpu > 0) & (c_cpu > 0)
-    return np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead, 0.0)
+    return np.maximum(t_cpu, t_gpu) + np.where(coexec, overhead + merge_us,
+                                               0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,7 +149,7 @@ def diff_plans(old: CoexecPlan, new: CoexecPlan, cpu_pred, gpu_pred, *,
     changes: List[DecisionChange] = []
     op_i = 0
     for idx, (nid, entry) in enumerate(zip(old.node_ids(), old.schedule)):
-        if "decision" not in entry:      # pool/add/attention/ssm: unsplit
+        if "decision" not in entry:      # pool/add: never partitioned
             continue
         o, n = old_dec[op_i], new_dec[op_i]
         if (o.c_cpu, o.c_gpu) != (n.c_cpu, n.c_gpu):
@@ -166,9 +192,12 @@ def replan(plan: CoexecPlan, cpu_pred, gpu_pred, calibrator: Calibrator, *,
     is_chain = graph.is_unit_chain()
     has_pool = any(n.kind == "pool" for n in graph)
     if not is_chain or prov.threads > 0 or has_pool:
+        # the bucket tag survives replanning: a portfolio entry's repaired
+        # plan still answers for the same (batch, seq) bucket
         new = plan_graph_cached(graph, cp, gp, threads=prov.threads,
                                 mechanism=mech, step=prov.step,
-                                seed=prov.seed, cache=cache)
+                                seed=prov.seed, bucket=prov.bucket,
+                                cache=cache)
     else:
         new = partition_ops_plan_cached([n.op for n in graph], cp, gp,
                                         mechanism=mech, step=prov.step,

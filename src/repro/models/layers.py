@@ -62,14 +62,18 @@ def _causal_mask(q_len: int, k_len: int, q_offset: int = 0,
 
 def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
                      mask: jax.Array) -> jax.Array:
-    """q: (B,T,H,hd) k/v: (B,S,Hkv,hd) grouped-query attention core."""
+    """q: (B,T,H,hd) k/v: (B,S,Hkv,hd) grouped-query attention core.
+
+    `mask` is (T, S) shared across the batch, or (B, T, S) when rows mask
+    different key ranges (mixed-length left-padded batches / per-slot
+    continuous-batching timelines)."""
     b, t, h, hd = q.shape
     hkv = k.shape[2]
     group = h // hkv
     qg = q.reshape(b, t, hkv, group, hd)
     scores = jnp.einsum("bthgd,bshd->bhgts", qg, k) / np.sqrt(hd)
-    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
-                       _NEG_INF)
+    m = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    scores = jnp.where(m, scores.astype(jnp.float32), _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
     return out.reshape(b, t, h, hd)
@@ -152,29 +156,46 @@ def attention_full(p: Params, x: jax.Array, spec: AttnSpec) -> jax.Array:
 
 def attention_decode(p: Params, x: jax.Array, spec: AttnSpec,
                      cache_k: jax.Array, cache_v: jax.Array,
-                     pos: jax.Array) -> Tuple[jax.Array, jax.Array,
-                                              jax.Array]:
-    """One-token decode. x: (B,1,D); cache: (B,S,kv,hd); pos: scalar."""
+                     pos: jax.Array, start=None) -> Tuple[jax.Array,
+                                                          jax.Array,
+                                                          jax.Array]:
+    """One-token decode. x: (B,1,D); cache: (B,S,kv,hd).
+
+    `pos` is a shared scalar, or a (B,) vector when rows sit at different
+    timeline positions (continuous batching: each slot has its own clock).
+    `start` is an optional (B,) vector of first-valid cache positions; keys
+    below it are masked out (left-padded batches).  The flash-decode path
+    only handles the shared-scalar unpadded case, so per-row timelines fall
+    back to the masked dense path regardless of cache length.
+    """
     b, _, _ = x.shape
     s = cache_k.shape[1]
-    positions = jnp.broadcast_to(pos[None], (b, 1))
-    q, k, v = _project_qkv(p, x, spec, positions)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
-    if s >= DECODE_FLASH_THRESHOLD:
+    per_row = jnp.ndim(pos) == 1
+    pos_b = pos if per_row else jnp.broadcast_to(pos[None], (b,))
+    q, k, v = _project_qkv(p, x, spec, pos_b[:, None])
+    if per_row:
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, pos_b].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos_b].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    if s >= DECODE_FLASH_THRESHOLD and not per_row and start is None:
         from repro.models.flash import flash_decode
         out = flash_decode(q, cache_k.astype(q.dtype),
                            cache_v.astype(q.dtype), pos,
                            window=spec.sliding_window)
     else:
         k_pos = jnp.arange(s)
-        mask = k_pos <= pos
+        mask = k_pos[None, :] <= pos_b[:, None]                  # (B, S)
         if spec.sliding_window > 0:
-            mask &= k_pos > pos - spec.sliding_window
+            mask &= k_pos[None, :] > pos_b[:, None] - spec.sliding_window
+        if start is not None:
+            mask &= k_pos[None, :] >= start[:, None]
         out = attention_scores(q, cache_k.astype(q.dtype),
-                               cache_v.astype(q.dtype), mask[None, :])
+                               cache_v.astype(q.dtype), mask[:, None, :])
     return out.reshape(b, 1, -1) @ p["wo"], cache_k, cache_v
 
 
@@ -196,11 +217,22 @@ def mlp(p: Params, x: jax.Array) -> jax.Array:
     return constrain(h @ p["w_down"], batch_axes(), None, None)
 
 
-def attention_prefill(p: Params, x: jax.Array, spec: AttnSpec
+def attention_prefill(p: Params, x: jax.Array, spec: AttnSpec, start=None
                       ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Causal self-attention returning (out, (k, v)) for cache filling."""
+    """Causal self-attention returning (out, (k, v)) for cache filling.
+
+    `start` is an optional (B,) vector of first real token positions for
+    left-padded batches; keys before a row's start never enter its softmax,
+    so a padded prompt attends exactly as it would alone (RoPE phases are
+    relative, so the constant position shift cancels in the scores)."""
     b, t, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(t), (b, t))
     q, k, v = _project_qkv(p, x, spec, positions)
-    out = _attend(q, k, v, spec)
+    if start is None:
+        out = _attend(q, k, v, spec)
+    else:
+        mask = _causal_mask(t, t, window=spec.sliding_window)    # (t, t)
+        mask = mask[None] & (jnp.arange(t)[None, None, :] >=
+                             start[:, None, None])               # (B, t, t)
+        out = attention_scores(q, k, v, mask)
     return out.reshape(b, t, -1) @ p["wo"], (k, v)

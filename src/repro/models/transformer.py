@@ -108,16 +108,17 @@ def block_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     return x + h, aux
 
 
-def block_prefill(p: Params, x: jax.Array, cfg: ModelConfig, kind: BlockKind
-                  ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array,
-                                                         jax.Array]]:
+def block_prefill(p: Params, x: jax.Array, cfg: ModelConfig, kind: BlockKind,
+                  start=None) -> Tuple[jax.Array, jax.Array,
+                                       Tuple[jax.Array, jax.Array]]:
     """Like block_forward but also returns the (k, v)-like pair to cache."""
     from repro.models.layers import attention_prefill
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind.attn == "mla":
         h, kv = mla_mod.mla_prefill(p["attn"], h, cfg)
     else:
-        h, kv = attention_prefill(p["attn"], h, _attn_spec(cfg, kind.window))
+        h, kv = attention_prefill(p["attn"], h, _attn_spec(cfg, kind.window),
+                                  start=start)
     x = x + h
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -129,8 +130,8 @@ def block_prefill(p: Params, x: jax.Array, cfg: ModelConfig, kind: BlockKind
 
 
 def block_decode(p: Params, x: jax.Array, cfg: ModelConfig, kind: BlockKind,
-                 cache: Tuple[jax.Array, jax.Array], pos: jax.Array
-                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+                 cache: Tuple[jax.Array, jax.Array], pos: jax.Array,
+                 start=None) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind.attn == "mla":
         h, ck, cv = mla_mod.mla_decode(p["attn"], h, cfg, cache[0], cache[1],
@@ -138,7 +139,7 @@ def block_decode(p: Params, x: jax.Array, cfg: ModelConfig, kind: BlockKind,
     else:
         h, ck, cv = attention_decode(p["attn"], h, _attn_spec(cfg,
                                                               kind.window),
-                                     cache[0], cache[1], pos)
+                                     cache[0], cache[1], pos, start=start)
     x = x + h
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if kind.ffn == "moe":
@@ -246,11 +247,31 @@ class TransformerModel:
     def init_cache(self, batch: int, max_len: int):
         return self.cache_spec(batch, max_len)
 
-    def prefill(self, params: Params, tokens: jax.Array, cache
-                ) -> Tuple[jax.Array, Any]:
+    @property
+    def pad_aware(self) -> bool:
+        """True when prefill/decode accept a per-row `start` pad boundary
+        (the GQA attention path; MLA caches latents and cannot mask pads
+        without re-deriving per-row keys)."""
+        kinds = self.prologue + self.pattern
+        return all(k.attn != "mla" for k in kinds)
+
+    # decode_step accepts a (B,) pos vector (one timeline per batch slot)
+    # on the same attention paths that support pad masking
+    per_slot_pos = pad_aware
+
+    def _check_padded(self, start) -> None:
+        if start is not None and not self.pad_aware:
+            raise ValueError("per-row start masking requires pad_aware "
+                             "attention (gqa); this stack contains mla")
+
+    def prefill(self, params: Params, tokens: jax.Array, cache,
+                start=None) -> Tuple[jax.Array, Any]:
         """Full-sequence causal pass that also fills the KV cache for the
-        first T positions.  Returns (last-position logits, filled cache)."""
+        first T positions.  Returns (last-position logits, filled cache).
+        `start` (B,) marks each row's first real token in a left-padded
+        batch; positions before it are masked out of every softmax."""
         cfg = self.cfg
+        self._check_padded(start)
         x = params["embed"][tokens]
 
         def fill(c, kv):
@@ -260,14 +281,14 @@ class TransformerModel:
         new_pro = []
         for p, kind, c in zip(params["prologue"], self.prologue,
                               cache["prologue"]):
-            x, _, kv = block_prefill(p, x, cfg, kind)
+            x, _, kv = block_prefill(p, x, cfg, kind, start=start)
             new_pro.append((fill(c[0], kv[0]), fill(c[1], kv[1])))
 
         def scan_body(x, scanned):
             layer_params, layer_cache = scanned
             new_cache = []
             for p, kind, c in zip(layer_params, self.pattern, layer_cache):
-                x, _, kv = block_prefill(p, x, cfg, kind)
+                x, _, kv = block_prefill(p, x, cfg, kind, start=start)
                 new_cache.append((fill(c[0], kv[0]), fill(c[1], kv[1])))
             return x, tuple(new_cache)
 
@@ -279,21 +300,28 @@ class TransformerModel:
         return logits, {"prologue": new_pro, "pattern": list(new_pat)}
 
     def decode_step(self, params: Params, tokens: jax.Array, cache,
-                    pos: jax.Array) -> Tuple[jax.Array, Any]:
-        """tokens (B,1); pos: scalar int32 — position being written."""
+                    pos: jax.Array, start=None) -> Tuple[jax.Array, Any]:
+        """tokens (B,1); pos: scalar int32 — position being written — or a
+        (B,) vector when each batch slot runs its own timeline (continuous
+        batching).  `start` (B,) masks cache entries before each row's
+        first real token (left-padded batches)."""
         cfg = self.cfg
+        self._check_padded(start)
+        if jnp.ndim(pos) == 1 and not self.per_slot_pos:
+            raise ValueError("per-slot pos vector requires gqa attention; "
+                             "this stack contains mla")
         x = params["embed"][tokens]
         new_pro = []
         for p, kind, c in zip(params["prologue"], self.prologue,
                               cache["prologue"]):
-            x, c2 = block_decode(p, x, cfg, kind, c, pos)
+            x, c2 = block_decode(p, x, cfg, kind, c, pos, start=start)
             new_pro.append(c2)
 
         def scan_body(x, scanned):
             layer_params, layer_cache = scanned
             new_cache = []
             for p, kind, c in zip(layer_params, self.pattern, layer_cache):
-                x, c2 = block_decode(p, x, cfg, kind, c, pos)
+                x, c2 = block_decode(p, x, cfg, kind, c, pos, start=start)
                 new_cache.append(c2)
             return x, tuple(new_cache)
 

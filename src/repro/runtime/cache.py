@@ -75,6 +75,7 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
                       threads: int,
                       mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
                       step: int = 8, seed: int = 1,
+                      bucket: str = "",
                       cache: PlanCache) -> CoexecPlan:
     """End-to-end graph planning through the cache.
 
@@ -83,7 +84,10 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
     mechanism, the candidate-grid step, the measurement seed, a structural
     checksum of both predictors, and — when the predictors are calibrated
     (`repro.measure.Calibrator.wrap`) — the calibration version, so refit
-    calibrators never alias stale plans.
+    calibrators never alias stale plans.  `bucket` tags the (batch, seq)
+    serving bucket a portfolio entry was compiled for; it folds into the
+    digest (omitted when empty, so unbucketed keys are unchanged) and lets
+    portfolio compiles warm-hit across processes.
     """
     prov = PlanProvenance(
         device=gpu_pred.device, threads=threads, mechanism=mechanism.value,
@@ -91,7 +95,8 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
         network_fingerprint=graph.fingerprint(),
         predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
         planner=PLANNER_PREDICTOR,
-        calibration=calibration_version(cpu_pred, gpu_pred))
+        calibration=calibration_version(cpu_pred, gpu_pred),
+        bucket=bucket)
     hit = cache.get(prov)
     if hit is not None:
         return hit
@@ -100,7 +105,8 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
     plan = plan_from_graph_report(graph, report, mechanism=mechanism,
                                   step=step, seed=seed,
                                   pred_checksum=prov.predictor_checksum,
-                                  calibration=prov.calibration)
+                                  calibration=prov.calibration,
+                                  bucket=bucket)
     cache.put(plan)
     return plan
 

@@ -174,14 +174,17 @@ class PlanProvenance:
     planner: str = PLANNER_PREDICTOR
     schema_version: int = PLAN_SCHEMA_VERSION
     calibration: str = ""         # Calibrator version ("" = uncalibrated)
+    bucket: str = ""              # (batch, seq) bucket tag ("" = unbucketed)
 
     def _canonical(self) -> Dict[str, Any]:
-        # the calibration field is omitted when empty so uncalibrated keys
-        # (and stored plan JSON) stay bit-identical to the pre-calibration
-        # format — existing on-disk caches remain warm
+        # the calibration/bucket fields are omitted when empty so legacy
+        # keys (and stored plan JSON) stay bit-identical to the older
+        # formats — existing on-disk caches remain warm
         d = dataclasses.asdict(self)
         if not d.get("calibration"):
             d.pop("calibration", None)
+        if not d.get("bucket"):
+            d.pop("bucket", None)
         return d
 
     @property
@@ -525,6 +528,7 @@ def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
                            pred_checksum: str, planner: str =
                            PLANNER_PREDICTOR,
                            calibration: str = "",
+                           bucket: str = "",
                            with_totals: bool = True) -> CoexecPlan:
     """Assemble the compiled plan of a `plan_graph`/`grid_plan_graph` run
     (provenance fingerprint = the graph's content-addressed digest)."""
@@ -532,7 +536,8 @@ def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
                           mechanism=mechanism.value, step=step, seed=seed,
                           network_fingerprint=graph.fingerprint(),
                           predictor_checksum=pred_checksum,
-                          planner=planner, calibration=calibration)
+                          planner=planner, calibration=calibration,
+                          bucket=bucket)
     return CoexecPlan(
         provenance=prov,
         schedule=build_graph_schedule(graph, report.decisions,

@@ -1,2 +1,8 @@
 from repro.serving.engine import Completion, Request, ServingEngine
-__all__ = ["Completion", "Request", "ServingEngine"]
+from repro.serving.scheduler import (ContinuousScheduler, FixedBatchReference,
+                                     ReplanEvent, SchedulerConfig,
+                                     SchedulerReport, ThrottleSim,
+                                     poisson_requests)
+__all__ = ["Completion", "ContinuousScheduler", "FixedBatchReference",
+           "ReplanEvent", "Request", "SchedulerConfig", "SchedulerReport",
+           "ServingEngine", "ThrottleSim", "poisson_requests"]

@@ -24,8 +24,9 @@ With `measurement_store=` (a `repro.measure.MeasurementStore` or a
 directory path), every `execute_plan` call auto-appends its per-op
 `MeasurementRecord`s to the store — the serving fleet becomes the
 calibration data source — and `engine.drift` exposes how far the
-executed-vs-predicted log-ratio has moved since the first recorded run
-(the replanning trigger an ops team would alert on).
+executed-vs-predicted log-ratio has moved (trailing-window median vs
+baseline-window median; the replanning trigger an ops team would alert
+on, consumed automatically by `repro.serving.ContinuousScheduler`).
 """
 from __future__ import annotations
 
@@ -50,12 +51,33 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0           # 0 = greedy
     frames: Optional[np.ndarray] = None  # enc-dec only
+    arrival_s: float = 0.0             # admission time (scheduler traffic)
 
 
 @dataclasses.dataclass
 class Completion:
     rid: int
     tokens: List[int]
+
+
+def sample_tokens(rng, logits: jax.Array, temperatures
+                  ) -> Tuple[jax.Array, Any]:
+    """Per-request sampling shared by the fixed-batch engine and the
+    continuous scheduler: row i of `logits` samples at `temperatures[i]`
+    (<= 0 = greedy).  Returns (tokens, rng) — the key is split (and thus
+    consumed) only when some row actually samples, so all-greedy batches
+    are rng-invariant."""
+    temps = jnp.asarray(temperatures, jnp.float32)
+    if temps.ndim == 0:
+        temps = jnp.full((logits.shape[0],), temps)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if not bool(jnp.any(temps > 0.0)):
+        return greedy, rng
+    rng, sub = jax.random.split(rng)
+    safe = jnp.where(temps > 0.0, temps, 1.0)
+    sampled = jax.random.categorical(
+        sub, logits / safe[:, None], axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy), rng
 
 
 class ServingEngine:
@@ -92,6 +114,7 @@ class ServingEngine:
         self._fidelity_log: List[float] = []   # mean log(wall/pred) per run
         self._plan_executor: Optional["PlanExecutor"] = None
         self.last_execution_report: Optional["ExecutionReport"] = None
+        self.last_batch_decode_steps = 0       # decode calls of last batch
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
 
@@ -140,10 +163,19 @@ class ServingEngine:
 
     @property
     def drift(self) -> Optional[float]:
-        """Fidelity drift of the shipped plan: latest mean log(wall/pred)
-        minus the first recorded run's (0.0 = stable, positive = the plan
-        got slower than planned — the replanning trigger).  None until two
-        executions have been observed."""
+        """Windowed fidelity drift of the shipped plan: trailing-window
+        median of the mean log(wall/pred) fidelity log minus its
+        baseline-window median (0.0 = stable, positive = the plan got
+        slower than planned — the replanning trigger).  Medians on both
+        ends mean a single noisy run — first or latest — cannot poison
+        the signal.  None until two executions have been observed."""
+        from repro.measure.drift import windowed_drift
+        return windowed_drift(self._fidelity_log)
+
+    @property
+    def drift_latest_vs_first(self) -> Optional[float]:
+        """The pre-windowing drift spelling (latest run minus first run),
+        kept for callers that want the raw two-point comparison."""
         if len(self._fidelity_log) < 2:
             return None
         return self._fidelity_log[-1] - self._fidelity_log[0]
@@ -152,17 +184,8 @@ class ServingEngine:
         """Per-request sampling: row i of `logits` samples at
         `temperatures[i]` (<= 0 = greedy), so mixed greedy/temperature
         batches are correct.  All-greedy batches never consume rng."""
-        temps = jnp.asarray(temperatures, jnp.float32)
-        if temps.ndim == 0:
-            temps = jnp.full((logits.shape[0],), temps)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if not bool(jnp.any(temps > 0.0)):
-            return greedy
-        self.rng, sub = jax.random.split(self.rng)
-        safe = jnp.where(temps > 0.0, temps, 1.0)
-        sampled = jax.random.categorical(
-            sub, logits / safe[:, None], axis=-1).astype(jnp.int32)
-        return jnp.where(temps > 0.0, sampled, greedy)
+        tok, self.rng = sample_tokens(self.rng, logits, temperatures)
+        return tok
 
     def run(self, requests: List[Request]) -> List[Completion]:
         out: List[Completion] = []
@@ -177,6 +200,15 @@ class ServingEngine:
         for i, r in enumerate(batch):
             toks[i, t - len(r.prompt):] = r.prompt     # left-pad
         toks = jnp.asarray(toks)
+        # pad-aware attention stacks mask everything before each row's
+        # first real token, so a short prompt padded behind a long one
+        # decodes exactly as it would alone (RoPE phases are relative —
+        # the constant shift cancels); recurrent/MLA stacks keep the
+        # legacy shared-timeline semantics
+        start = None
+        if getattr(self.model, "pad_aware", False):
+            start = jnp.asarray(
+                np.array([t - len(r.prompt) for r in batch], np.int32))
 
         cache = self.model.init_cache(b, self.max_len)
         if self.cfg.is_encoder_decoder:
@@ -186,6 +218,9 @@ class ServingEngine:
                          np.float32)
                 for r in batch]))
             logits, cache = self._prefill(self.params, toks, cache, frames)
+        elif start is not None:
+            logits, cache = self._prefill(self.params, toks, cache,
+                                          start=start)
         else:
             logits, cache = self._prefill(self.params, toks, cache)
 
@@ -197,10 +232,19 @@ class ServingEngine:
         tok = self._sample(logits, temps)
         for i in range(b):
             generated[i].append(int(tok[i]))
+        self.last_batch_decode_steps = 0
         for step in range(1, max_new):
+            if all(len(g) >= r.max_new_tokens
+                   for g, r in zip(generated, batch)):
+                break                   # every request already done
             pos = jnp.int32(t + step - 1)
-            logits, cache = self._decode(self.params, tok[:, None], cache,
-                                         pos)
+            if start is not None:
+                logits, cache = self._decode(self.params, tok[:, None],
+                                             cache, pos, start=start)
+            else:
+                logits, cache = self._decode(self.params, tok[:, None],
+                                             cache, pos)
+            self.last_batch_decode_steps += 1
             tok = self._sample(logits, temps)
             for i in range(b):
                 if len(generated[i]) < batch[i].max_new_tokens:
