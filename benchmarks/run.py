@@ -36,6 +36,7 @@ SUITES = {
     "calibration": "benchmarks.calibration_bench",
     "decode_bench": "benchmarks.decode_bench",
     "serving_bench": "benchmarks.serving_bench",
+    "tune_bench": "benchmarks.tune_bench",
 }
 
 

@@ -1,0 +1,110 @@
+"""Tuned-vs-default tile-config benchmark (PR 9 headline suite).
+
+Kernel rows measure each op kind's Pallas lowering wall under the default
+blocking and under the autotuned winner from the numerics-preserving grid
+(`runtime.autotune.autotune`), on shapes where the default grid is visibly
+sub-optimal in interpret mode (grid-step count dominates the wall).  Raw
+walls are host-dependent and carry the `_wallclock` suffix so
+`bench --compare` skips them; the comparable metric per kind is the
+`*_speedup` row (default wall / tuned wall — dimensionless, stable across
+hosts of different speeds).
+
+The e2e rows compile the same op chain untuned and with
+`repro.compile(..., tune=True)` and execute both: the tuned plan must
+reproduce the untuned output **bit-identically** (the preserving grid pins
+every reduction-axis block), reported as `identical=1` alongside the wall
+delta.  When the planner splits an op across CPU+GPU its co-execution
+lowering is tile-independent, so the e2e delta only reflects tiles on the
+decisions that stayed dense — the kernel rows are the headline speedup.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro
+from benchmarks.common import csv_row, plan_cache
+from repro.core.types import ConvOp, LinearOp
+from repro.kernels import registry
+from repro.runtime.autotune import (DEFAULT_TUNE_DIR, TuneCache, autotune,
+                                    measure_device, measure_tile_us)
+
+DEVICE = "moto2022"
+THREADS = 3
+
+#: op shapes where the numerics-preserving grid holds a known win: the
+#: default square-ish blocking leaves many grid steps on the table
+KERNEL_OPS = (
+    ("linear_196x512x512", LinearOp(L=196, C_in=512, C_out=512)),
+    ("conv_32x32x64to128", ConvOp(H_in=32, W_in=32, C_in=64, C_out=128)),
+)
+
+#: e2e chain: three of the linear shapes above (tuned once, applied thrice)
+E2E_OPS = [LinearOp(L=196, C_in=512, C_out=512)] * 3
+
+
+def _kernel_rows(cache: TuneCache) -> list:
+    rows = []
+    device, backend = measure_device()
+    for name, op in KERNEL_OPS:
+        spec = registry.tile_spec(registry.op_kind(op))
+        default = spec.default_config(op)
+        hits0 = cache.hits
+        best = autotune(op, cache=cache, device=device, backend=backend)
+        src = "cache" if cache.hits > hits0 else "measured"
+        default_us = measure_tile_us(op, None, reps=3)
+        tuned_us = measure_tile_us(op, best, reps=3)
+        speedup = default_us / tuned_us if tuned_us > 0 else float("inf")
+        print(f"# {name}: default {default_us / 1e3:.1f} ms "
+              f"[{default.label()}] vs tuned {tuned_us / 1e3:.1f} ms "
+              f"[{best.label()}] ({speedup:.2f}x, {src})")
+        rows.append(csv_row(f"tune_{name}_default_wallclock", default_us,
+                            f"tile={default.label()}"))
+        rows.append(csv_row(f"tune_{name}_tuned_wallclock", tuned_us,
+                            f"tile={best.label()},src={src}"))
+        rows.append(csv_row(f"tune_{name}_speedup", speedup,
+                            f"default={default.label()},"
+                            f"tuned={best.label()}"))
+    return rows
+
+
+def _e2e_rows(cache: TuneCache) -> list:
+    target = repro.Target(device=DEVICE, threads=THREADS)
+    pcache = plan_cache()
+    base = repro.compile(E2E_OPS, target, cache=pcache)
+    tuned = repro.compile(E2E_OPS, target, cache=pcache, tune=True,
+                          tune_cache=cache)
+    walls = {}
+    for label, compiled in (("default", base), ("tuned", tuned)):
+        reps = [compiled.profile(fused=True, warmup=True) for _ in range(2)]
+        walls[label] = min(r.wall_us for r in reps)
+    y = np.asarray(tuned.run(fused=True, warmup=True))
+    ref = np.asarray(base.run(fused=True, warmup=True))
+    identical = bool(np.array_equal(y, ref))
+    tiles = sorted({s.tile.label() for s in tuned.plan.exec_specs()
+                    if getattr(s, "tile", None) is not None})
+    print(f"# e2e: default {walls['default'] / 1e3:.1f} ms vs tuned "
+          f"{walls['tuned'] / 1e3:.1f} ms, tiles={tiles or ['(all default)']}"
+          f", {'bit-identical' if identical else 'OUTPUT MISMATCH'}")
+    return [
+        csv_row("tune_e2e_default_wallclock", walls["default"],
+                f"key={base.key}"),
+        csv_row("tune_e2e_tuned_wallclock", walls["tuned"],
+                f"key={tuned.key},tune={tuned.provenance.tune},"
+                f"tiles={'|'.join(tiles) or 'none'},"
+                f"identical={int(identical)}"),
+    ]
+
+
+def run() -> list:
+    cache = TuneCache(DEFAULT_TUNE_DIR)
+    rows = _kernel_rows(cache)
+    rows += _e2e_rows(cache)
+    print(f"# tune cache: {cache.hits} hits / {cache.misses} misses "
+          f"({cache.root})")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main("tune_bench", run)

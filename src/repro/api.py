@@ -234,7 +234,9 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             predictors=None,
             samples: int = 400, estimators: int = 60,
             predictor_cache: Optional[Union[str, Path]] = None,
-            bucket: str = "") -> "CompiledNetwork":
+            bucket: str = "",
+            tune: bool = False,
+            tune_cache=None) -> "CompiledNetwork":
     """Compile a network into a `CompiledNetwork` (cached planning).
 
     * `network` — a `repro.graph.Graph`, a registered name ("resnet18",
@@ -256,6 +258,14 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
     folded into the provenance digest so portfolio entries get their own
     cache files (see `compile_portfolio`); only graph plans in
     "predicted" mode accept it.
+
+    `tune=True` runs the kernel tile autotuner (`runtime.autotune`) over
+    the plan's ops on a cache miss and attaches winning non-default
+    `TileConfig`s to the decisions; the tune-cache version folds into
+    provenance, so tuned and untuned plans occupy distinct cache entries
+    and each warm-hits independently.  `tune_cache` is a `TuneCache` or a
+    directory path (default `reports/tune`); a warm tune cache makes the
+    annotation pass measurement-free.
     """
     if not isinstance(target, Target):
         raise TypeError(f"target must be a repro.Target, "
@@ -273,6 +283,21 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
     mech = target.sync_mechanism
     hits_before = cache.hits
 
+    tune_tag = ""
+    annotate = None
+    if tune:
+        from repro.runtime.autotune import (DEFAULT_TUNE_DIR, TuneCache,
+                                            annotate_plan_tiles,
+                                            tune_cache_version)
+        tc = tune_cache
+        if not isinstance(tc, TuneCache):
+            tc = TuneCache(Path(tc) if tc is not None
+                           else Path(DEFAULT_TUNE_DIR))
+        tune_tag = tune_cache_version()
+
+        def annotate(plan, _tc=tc):
+            return annotate_plan_tiles(plan, cache=_tc)
+
     if mode == MODE_GRID:
         if predictors is not None:
             raise ValueError("mode='grid' is measurement-driven and takes "
@@ -284,7 +309,8 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
                 [(op_kind(op), op) for op in graph_or_ops])
         plan = grid_plan_graph_cached(
             graph_or_ops, target.device, target.threads, mechanism=mech,
-            step=target.step, seed=target.seed, cache=cache)
+            step=target.step, seed=target.seed, tune=tune_tag,
+            annotate=annotate, cache=cache)
     else:
         if predictors is None:
             kinds: Tuple[str, ...] = ("linear", "conv")
@@ -309,11 +335,13 @@ def compile(network, target: Target, *,               # noqa: A001 — facade
             plan = plan_graph_cached(
                 graph_or_ops, cpu_pred, gpu_pred, threads=target.threads,
                 mechanism=mech, step=target.step, seed=target.seed,
-                bucket=bucket, cache=cache)
+                bucket=bucket, tune=tune_tag, annotate=annotate,
+                cache=cache)
         else:
             plan = partition_ops_plan_cached(
                 graph_or_ops, cpu_pred, gpu_pred,
-                mechanism=mech, step=target.step, cache=cache)
+                mechanism=mech, step=target.step, tune=tune_tag,
+                annotate=annotate, cache=cache)
 
     return CompiledNetwork(plan=plan, target=target, mode=mode,
                            from_cache=cache.hits > hits_before,
@@ -518,10 +546,12 @@ class CompiledNetwork:
         """Per-op decision table: what the planner chose and why it costs
         what it costs (pure plan introspection, no execution)."""
         prov = self.provenance
+        tune_tag = (f" tune={prov.tune}"
+                    if getattr(prov, "tune", "") else "")
         lines = [
             f"CompiledNetwork [{self.mode}] device={prov.device} "
             f"cpu{prov.threads} mechanism={prov.mechanism} "
-            f"step={prov.step} planner={prov.planner}",
+            f"step={prov.step} planner={prov.planner}{tune_tag}",
             f"  key={self.key}  fingerprint={prov.network_fingerprint}",
             f"  {'node':>12}  {'seg':>3}  {'label':<42} "
             f"{'cpu':>5}/{'gpu':<5} {'pred_us':>9}  placement",

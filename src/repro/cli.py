@@ -10,6 +10,9 @@ Subcommands:
   * `calibrate` — close the loop: execute + record measurements, fit a
                   `Calibrator`, replan with corrected predictors, and
                   print the plan diff.
+  * `tune`      — measured Pallas tile-config search for a network's ops,
+                  cached in the on-disk `TuneCache`; `plan/execute
+                  --tune` attach the winners to compiled plans.
   * `bench`     — forward to the paper benchmark driver (`benchmarks.run`).
   * `serve`     — forward to the serving launcher (`repro.launch.serve`):
                   the fixed-batch engine, or — with `--arrivals poisson
@@ -70,6 +73,13 @@ def _add_compile_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--predictor-cache", default=None,
                     help="optional directory to cache trained predictors "
                          "(a load is checksum-identical to a retrain)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune kernel tile configs on a plan-cache "
+                         "miss and attach the winners to the plan "
+                         "(tuned plans get their own cache entries)")
+    ap.add_argument("--tune-cache-dir", default="reports/tune",
+                    help="on-disk TuneCache directory (measured tile "
+                         "choices, content-addressed)")
 
 
 class _UserInputError(Exception):
@@ -111,7 +121,10 @@ def _compile(args):
         compiled = _api_compile(_network_arg(args), target, mode=args.mode,
                                 cache=args.cache_dir, samples=args.samples,
                                 estimators=args.estimators,
-                                predictor_cache=args.predictor_cache)
+                                predictor_cache=args.predictor_cache,
+                                tune=getattr(args, "tune", False),
+                                tune_cache=getattr(args, "tune_cache_dir",
+                                                   None))
     except ValueError as e:
         raise _UserInputError(str(e)) from e
     return compiled, time.time() - t0
@@ -241,6 +254,47 @@ def _cmd_calibrate(args) -> int:
     return 0
 
 
+def _cmd_tune(args) -> int:
+    """Measured tile search for every unique op of a network, through the
+    on-disk TuneCache (warm entries are returned without measuring)."""
+    from repro.api import _resolve_graph
+    from repro.kernels import registry
+    from repro.runtime.autotune import (TuneCache, autotune, measure_device,
+                                        tune_cache_version)
+    try:
+        graph_or_ops, is_graph = _resolve_graph(_network_arg(args))
+    except ValueError as e:
+        raise _UserInputError(str(e)) from e
+    ops = ([n.op for n in graph_or_ops if n.op is not None] if is_graph
+           else list(graph_or_ops))
+    unique = list(dict.fromkeys(ops))
+    cache = TuneCache(Path(args.tune_cache_dir))
+    device, backend = measure_device()
+    print(f"tune {args.model or args.network}: {len(unique)} unique ops on "
+          f"{device}/{backend} ({tune_cache_version()}) -> {cache.root}")
+    tuned = 0
+    for op in unique:
+        spec = registry.tile_spec(registry.op_kind(op))
+        n_cand = len(spec.configs(op))
+        t0 = time.time()
+        hits = cache.hits
+        best = autotune(op, cache=cache, device=device, backend=backend,
+                        reps=args.reps)
+        warm = cache.hits > hits
+        default = spec.default_config(op)
+        if best == default:
+            verdict = f"default {best.label()}"
+        else:
+            tuned += 1
+            verdict = f"{default.label()} -> {best.label()}"
+        src = "cache" if warm else f"measured {n_cand} candidates"
+        print(f"  {registry.op_label(op):42s} {verdict:28s} "
+              f"({src}, {time.time() - t0:.1f}s)")
+    print(f"  {tuned}/{len(unique)} ops tuned away from the default "
+          f"blocking ({cache.hits} cache hits)")
+    return 0
+
+
 def _cmd_bench(rest: Sequence[str]) -> int:
     # benchmarks/ lives at the repo root (it is not an installed package);
     # running from the checkout works directly, an installed interpreter
@@ -326,6 +380,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_cal.add_argument("--verbose", action="store_true",
                        help="print per-(kind, mode) correction lines")
 
+    p_tune = sub.add_parser(
+        "tune", help="autotune kernel tile configs for a network's ops and "
+                     "store the winners in the on-disk TuneCache")
+    _add_compile_args(p_tune)
+    p_tune.add_argument("--reps", type=int, default=2,
+                        help="timed repetitions per candidate (median)")
+
     # bench/serve exist here only so `python -m repro --help` lists them;
     # their real dispatch is the verbatim-forward intercept above
     sub.add_parser("bench",
@@ -343,6 +404,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             return _cmd_plan(args)
         if args.cmd == "calibrate":
             return _cmd_calibrate(args)
+        if args.cmd == "tune":
+            return _cmd_tune(args)
         return _cmd_execute(args)
     except _UserInputError as e:
         # e.g. an unknown --network/--model: surface the registry listing

@@ -17,7 +17,7 @@ measurements are per-row, so batch composition cannot change the argmin.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,6 +42,10 @@ class PartitionDecision:
     #: "ssm-state" (typed axes, where they count axis units — heads or
     #: cache positions), or "none" (exclusive placement of an axis kind)
     axis: str = "channel"
+    #: autotuned kernel tile config for the op's Pallas lowering, attached
+    #: by the tune annotation pass (runtime/autotune.py); None means the
+    #: kind's default blocking and keeps pre-tile plan JSON byte-identical
+    tile: Optional[registry.TileConfig] = None
 
     @property
     def exclusive(self) -> bool:

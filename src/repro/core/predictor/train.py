@@ -18,7 +18,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.core.predictor.features import (blackbox_features, kernel_of,
-                                           whitebox_features)
+                                           tile_features, whitebox_features)
 from repro.core.predictor.gbdt import GBDTParams, GBDTRegressor
 from repro.core.simulator.measure import measure_latency_us
 from repro.core.types import Op
@@ -30,20 +30,36 @@ class LatencyPredictor:
     backend: str                    # 'gpu' | 'cpu1' | 'cpu2' | 'cpu3'
     whitebox: bool
     models: Dict[str, GBDTRegressor]   # kernel -> model ('*' if not split)
+    #: when True the feature vectors carry the resolved kernel tile config
+    #: (see features.tile_features), so `predict(ops, tiles=...)` re-prices
+    #: autotuned decisions; False keeps pre-tile vectors and checksums
+    #: (read via getattr — predictors pickled before this field existed
+    #: unpickle without it)
+    tiles: bool = False
 
-    def predict(self, ops: Sequence[Op]) -> np.ndarray:
+    @property
+    def tile_aware(self) -> bool:
+        return bool(getattr(self, "tiles", False))
+
+    def _featurize(self, ops: Sequence[Op], tiles) -> np.ndarray:
+        feats = (whitebox_features(ops, self.device)
+                 if self.whitebox and self.backend == "gpu"
+                 else blackbox_features(ops))
+        if self.tile_aware:
+            feats = np.hstack([feats, tile_features(ops, tiles)])
+        return feats
+
+    def predict(self, ops: Sequence[Op],
+                tiles: Optional[Sequence] = None) -> np.ndarray:
         ops = list(ops)
         out = np.empty(len(ops))
+        feats = self._featurize(ops, tiles)
         if not self.whitebox or self.backend != "gpu":
-            feats = (whitebox_features(ops, self.device)
-                     if self.whitebox and self.backend == "gpu"
-                     else blackbox_features(ops))
             model = self.models["*"]
             out[:] = np.exp(model.predict(feats))
             return out
         # white-box GPU: route each op to its kernel's model
         kernels = np.array([kernel_of(op, self.device) for op in ops])
-        feats = whitebox_features(ops, self.device)
         for kern in np.unique(kernels):
             sel = kernels == kern
             model = self.models.get(kern) or self.models["*"]
@@ -71,11 +87,18 @@ def train_predictor(ops: Sequence[Op], device: str, backend: str, *,
                     whitebox: bool = True,
                     y_us: Optional[np.ndarray] = None,
                     params: Optional[GBDTParams] = None,
+                    tiles: bool = False,
+                    tile_list: Optional[Sequence] = None,
                     hpo_trials: int = 0, seed: int = 0) -> LatencyPredictor:
     """Fit a predictor on measured latencies of `ops`.
 
     hpo_trials > 0 runs an Optuna-style random search with a held-out
-    validation split (20%), mirroring Section 5.2.
+    validation split (20%), mirroring Section 5.2.  `tiles=True` appends
+    each op's resolved kernel tile config to the feature vector
+    (`tile_list[i]` when given, else the default blocking), producing a
+    tile-aware predictor that can re-price autotuned decisions; the
+    default keeps feature vectors — and the structural checksum cached
+    plans key on — identical to pre-tile builds.
     """
     ops = list(ops)
     y = measure_ops(ops, device, backend, seed=seed) if y_us is None \
@@ -84,6 +107,8 @@ def train_predictor(ops: Sequence[Op], device: str, backend: str, *,
 
     gpu_wb = whitebox and backend == "gpu"
     X = whitebox_features(ops, device) if gpu_wb else blackbox_features(ops)
+    if tiles:
+        X = np.hstack([X, tile_features(ops, tile_list)])
 
     def fit_group(Xg, yg, prm):
         return GBDTRegressor(prm, seed=seed).fit(Xg, yg)
@@ -126,7 +151,7 @@ def train_predictor(ops: Sequence[Op], device: str, backend: str, *,
         models["*"] = fit_group(X, logy, prm)
 
     return LatencyPredictor(device=device, backend=backend,
-                            whitebox=gpu_wb, models=models)
+                            whitebox=gpu_wb, models=models, tiles=tiles)
 
 
 def mape(pred_us: np.ndarray, true_us: np.ndarray) -> float:
@@ -156,7 +181,8 @@ class MuxPredictor:
         return getattr(self, "attention" if kind == "attention" else
                        "ssm" if kind == "ssm" else kind, None)
 
-    def predict(self, ops: Sequence[Op]) -> np.ndarray:
+    def predict(self, ops: Sequence[Op],
+                tiles: Optional[Sequence] = None) -> np.ndarray:
         from repro.kernels.registry import op_kind
         ops = list(ops)
         out = np.empty(len(ops))
@@ -168,5 +194,7 @@ class MuxPredictor:
                 raise ValueError(
                     f"MuxPredictor has no {kind!r} member; train with "
                     f"kinds including {kind!r}")
-            out[idx] = member.predict([ops[i] for i in idx])
+            out[idx] = member.predict(
+                [ops[i] for i in idx],
+                None if tiles is None else [tiles[i] for i in idx])
         return out

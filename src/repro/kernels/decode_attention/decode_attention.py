@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiles import check_tile as _check_tile
+
 _NEG_INF = -1e30
 
 
@@ -68,17 +70,20 @@ def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     pos: jax.Array, *, window: int = 0, bs: int = 512,
+                     pos: jax.Array, *, window: int = 0, bs: int = None,
                      interpret: bool = False) -> jax.Array:
     """q: (n_heads, hd); k/v: (S, n_kv, hd); pos: scalar int32.
 
     Returns (n_heads, hd).  Single-sequence; vmap over batch in ops.py.
+    ``bs=None`` takes the default cache block clamped to the lane-padded
+    cache length; an explicit ``bs`` past that cap raises (see
+    kernels.tiles.check_tile).
     """
     h, hd = q.shape
     s, kv, _ = k.shape
     g = h // kv
     g_pad = max(8, -(-g // 8) * 8)
-    bs = min(bs, -(-s // 128) * 128)
+    bs = _check_tile("bs", bs, 512, s, 1, lim_align=128)
 
     # (kv, g_pad, hd) query layout; (kv, S_pad, hd) cache layout
     qg = q.reshape(kv, g, hd)

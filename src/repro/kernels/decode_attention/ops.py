@@ -21,7 +21,7 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 
 @functools.partial(jax.jit, static_argnames=("window", "bs", "interpret",
                                              "use_kernel"))
-def decode_attention_op(q, k, v, pos, *, window: int = 0, bs: int = 512,
+def decode_attention_op(q, k, v, pos, *, window: int = 0, bs: int = None,
                         interpret: bool = False, use_kernel: bool = True):
     """Batched decode attention.
 
@@ -37,23 +37,29 @@ def decode_attention_op(q, k, v, pos, *, window: int = 0, bs: int = 512,
 
 # ------------------------------------------------- registry unit lowering
 
-def _unit_attention(x, w, op, *, use_kernel: bool, interpret: bool = False):
+def _unit_attention(x, w, op, *, use_kernel: bool, interpret: bool = False,
+                    tile=None):
     """`(x, w, op)` unit contract of an AttnOp node: `x` is the flattened
     (1, H*hd) query block, `w` the stacked (2, S, KV, hd) KV cache."""
     q = x.reshape(op.H, op.hd)
     k, v = w[0], w[1]
     pos = op.S - 1                   # attend to the whole recorded cache
     if use_kernel:
+        # the tile-less default keeps the historical min(512, S) block so
+        # untuned plans stay bit-identical with pre-tile builds
+        bs = (min(512, op.S) if tile is None
+              else registry.resolve_tile(op, tile).get("bs"))
         out = decode_attention_op(q[None], k[None], v[None], pos,
-                                  window=op.window, bs=min(512, op.S),
+                                  window=op.window, bs=bs,
                                   interpret=interpret)[0]
     else:
         out = decode_attention_ref(q, k, v, pos, window=op.window)
     return out.reshape(1, op.H * op.hd)
 
 
-def attention_unit_pallas(x, w, op, *, interpret: bool = False):
-    return _unit_attention(x, w, op, use_kernel=True, interpret=interpret)
+def attention_unit_pallas(x, w, op, *, interpret: bool = False, tile=None):
+    return _unit_attention(x, w, op, use_kernel=True, interpret=interpret,
+                           tile=tile)
 
 
 def attention_unit_oracle(x, w, op):
@@ -98,7 +104,8 @@ def pack_head_split(w, op, n_fast, mesh):
 
 
 def run_head_split(x, packed, split, mesh, op, n_fast, *, gather=True,
-                   x_plan=None, use_pallas=False, interpret=False):
+                   x_plan=None, use_pallas=False, interpret=False,
+                   tile=None):
     """Head-split decode attention over the two-group mesh.
 
     x: (1, H*hd) replicated query block — or, with `x_plan`, a producer's
@@ -152,7 +159,7 @@ def run_head_split(x, packed, split, mesh, op, n_fast, *, gather=True,
             return _shard_map()(local, **kwargs)
 
     key = ("attn-head", op, n_fast, x_plan, mesh_fingerprint(mesh),
-           tuple(x.shape), str(x.dtype), str(packed.dtype))
+           tuple(x.shape), str(x.dtype), str(packed.dtype), tile)
     y = cached_coexec_program(key, build)(x, packed)
     if not gather:
         return y
@@ -194,7 +201,8 @@ def pack_kv_block_split(w, op, n_fast, mesh):
 
 
 def run_kv_block_split(x, packed, split, mesh, op, n_fast, *, gather=True,
-                       x_plan=None, use_pallas=False, interpret=False):
+                       x_plan=None, use_pallas=False, interpret=False,
+                       tile=None):
     """kv-block-split decode attention: returns the materialized (1, H*hd)
     output regardless of `gather` (the merge happens inside the program)."""
     s_pad = max(n_fast, op.S - n_fast)
@@ -204,7 +212,7 @@ def run_kv_block_split(x, packed, split, mesh, op, n_fast, *, gather=True,
         return _build_kv_block_program(x_plan, mesh, op, n_fast, s_pad, g)
 
     key = ("attn-kv-block", op, n_fast, x_plan, mesh_fingerprint(mesh),
-           tuple(x.shape), str(x.dtype), str(packed.dtype))
+           tuple(x.shape), str(x.dtype), str(packed.dtype), tile)
     return cached_coexec_program(key, build)(x, packed)
 
 

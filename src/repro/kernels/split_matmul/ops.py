@@ -23,8 +23,8 @@ from repro.kernels.split_matmul.ref import split_matmul_ref
 @functools.partial(jax.jit,
                    static_argnames=("c0", "width", "bm", "bn", "bk",
                                     "interpret", "use_kernel"))
-def split_matmul_op(x, w, c0: int, width: int, *, bm: int = 128,
-                    bn: int = 128, bk: int = 512, interpret: bool = False,
+def split_matmul_op(x, w, c0: int, width: int, *, bm: int = None,
+                    bn: int = None, bk: int = None, interpret: bool = False,
                     use_kernel: bool = True):
     if not use_kernel:
         return split_matmul_ref(x, w, c0, width)
@@ -34,8 +34,12 @@ def split_matmul_op(x, w, c0: int, width: int, *, bm: int = 128,
 
 # ------------------------------------------------------- registry hookup
 
-def _linear_pallas(x, w, op, *, interpret: bool = False):
-    return split_matmul_op(x, w, 0, op.C_out, interpret=interpret)
+def _linear_pallas(x, w, op, *, interpret: bool = False, tile=None):
+    if tile is None:
+        return split_matmul_op(x, w, 0, op.C_out, interpret=interpret)
+    v = registry.resolve_tile(op, tile).as_dict()
+    return split_matmul_op(x, w, 0, op.C_out, bm=v["bm"], bn=v["bn"],
+                           bk=v["bk"], interpret=interpret)
 
 
 def _linear_oracle(x, w, op):

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiles import check_tile as _check_tile
+
 
 def _split_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     """One (bm, bn) output tile; accumulates over the K grid dimension."""
@@ -40,21 +42,26 @@ def _split_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
 
 
 def split_matmul(x: jax.Array, w: jax.Array, c0: int, width: int, *,
-                 bm: int = 128, bn: int = 128, bk: int = 512,
+                 bm: int = None, bn: int = None, bk: int = None,
                  interpret: bool = False) -> jax.Array:
     """Y = X @ W[:, c0:c0+width] via a blocked Pallas kernel.
 
     x: (M, K); w: (K, N).  c0/width are static Python ints (the
     partitioner's decision is made offline).  Returns (M, width).
+
+    Tile params left as None take the default blocking clamped to the
+    problem extents; explicitly requested tiles must already be legal
+    (aligned and within the padded extents) or ValueError is raised —
+    clamping lives in registry.TileSpec.clamp_tile, not here.
     """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2 and 0 <= c0 and c0 + width <= n
     assert width > 0
 
-    bm = min(bm, _round_up(m, 8))
-    bn = min(bn, _round_up(width, 128))
-    bk = min(bk, _round_up(k, 128))
+    bm = _check_tile("bm", bm, 128, m, 8)
+    bn = _check_tile("bn", bn, 128, width, 128)
+    bk = _check_tile("bk", bk, 512, k, 128)
 
     # slice this group's channels; pad all dims to block multiples
     w_slice = jax.lax.slice(w, (0, c0), (k, c0 + width))

@@ -21,7 +21,7 @@ from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_scan
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret",
                                              "use_kernel"))
-def ssd_chunk_op(x, b, c, dt, a, state0, *, chunk: int = 256,
+def ssd_chunk_op(x, b, c, dt, a, state0, *, chunk: int = None,
                  interpret: bool = False, use_kernel: bool = True):
     if not use_kernel:
         return ssd_scan_ref(x, b, c, dt, a, state0)
@@ -51,19 +51,25 @@ def _unpack_params(w, op):
     return b, c, dt, a, state0
 
 
-def _unit_ssm(x, w, op, *, use_kernel: bool, interpret: bool = False):
+def _unit_ssm(x, w, op, *, use_kernel: bool, interpret: bool = False,
+              tile=None):
     """`(x, w, op)` unit contract of an SSMOp node: `x` is the (T, H*hd)
     inner-projected token block, `w` the flat B/C/dt/a/state0 vector."""
     xb = x.reshape(1, op.T, op.H, op.hd)
     b, c, dt, a, state0 = _unpack_params(w, op)
+    # the tile-less default keeps the historical min(256, T) chunk so
+    # untuned plans stay bit-identical with pre-tile builds
+    chunk = (min(256, op.T) if tile is None
+             else registry.resolve_tile(op, tile).get("chunk"))
     _, y = ssd_chunk_op(xb, b, c, dt, a, state0,
-                        chunk=min(256, op.T), interpret=interpret,
+                        chunk=chunk, interpret=interpret,
                         use_kernel=use_kernel)
     return y.reshape(op.T, op.H * op.hd)
 
 
-def ssm_unit_pallas(x, w, op, *, interpret: bool = False):
-    return _unit_ssm(x, w, op, use_kernel=True, interpret=interpret)
+def ssm_unit_pallas(x, w, op, *, interpret: bool = False, tile=None):
+    return _unit_ssm(x, w, op, use_kernel=True, interpret=interpret,
+                     tile=tile)
 
 
 def ssm_unit_oracle(x, w, op):
@@ -152,7 +158,8 @@ def _ssd_scan_decay(x, b, c, dt, decay, state0):
 
 
 def run_state_split(x, packed, split, mesh, op, n_fast, *, gather=True,
-                    x_plan=None, use_pallas=False, interpret=False):
+                    x_plan=None, use_pallas=False, interpret=False,
+                    tile=None):
     """State-split SSD scan over the two-group mesh.
 
     x: (T, H*hd) replicated token block — or, with `x_plan`, a producer's
@@ -201,7 +208,7 @@ def run_state_split(x, packed, split, mesh, op, n_fast, *, gather=True,
             return _shard_map()(local, **kwargs)
 
     key = ("ssm-state", op, n_fast, x_plan, mesh_fingerprint(mesh),
-           tuple(x.shape), str(x.dtype), str(packed.dtype))
+           tuple(x.shape), str(x.dtype), str(packed.dtype), tile)
     y = cached_coexec_program(key, build)(x, packed)
     if not gather:
         return y

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiles import check_chunk as _check_chunk
+
 
 def _ssd_chunk_kernel(a_ref, x_ref, b_ref, c_ref, dt_ref, s0_ref,
                       y_ref, sf_ref, state_ref, *, n_chunks: int, L: int):
@@ -64,16 +66,18 @@ def _ssd_chunk_kernel(a_ref, x_ref, b_ref, c_ref, dt_ref, s0_ref,
 
 def ssd_chunk_scan(x: jax.Array, b: jax.Array, c: jax.Array,
                    dt: jax.Array, a: jax.Array, state0: jax.Array, *,
-                   chunk: int = 256, interpret: bool = False):
+                   chunk: int = None, interpret: bool = False):
     """Chunked SSD scan.
 
     x: (B,T,H,hd) f32; b/c: (B,T,N); dt: (B,T,H); a: (H,) negative;
     state0: (B,H,hd,N).  Returns (final_state (B,H,hd,N), y (B,T,H,hd)).
+    ``chunk=None`` takes the default chunk clamped to T; an explicit chunk
+    must divide T exactly and not exceed it, else ValueError (see
+    kernels.tiles.check_chunk).
     """
     bsz, t, h, hd = x.shape
     n = b.shape[-1]
-    L = min(chunk, t)
-    assert t % L == 0
+    L = _check_chunk("chunk", chunk, 256, t)
     nch = t // L
 
     # layouts: leading (B, H) program dims, chunked time

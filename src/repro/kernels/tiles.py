@@ -1,0 +1,61 @@
+"""Kernel-side tile-param validation shared by the four Pallas kernels.
+
+The kernels used to clamp oversize tile requests silently (``bm = min(bm,
+round_up(m, 8))``); that rewrite now lives explicitly in
+``registry.TileSpec.clamp_tile``, and the kernels *validate* instead: a
+tile param left as None resolves to the default blocking clamped to the
+problem extents (the pre-tile behaviour for every existing caller), while
+an explicitly requested value that is misaligned or oversize raises
+ValueError rather than being quietly rewritten.
+
+This module is dependency-free on purpose (no registry import) so the
+kernel files stay importable without dragging in the op-type layer.
+"""
+from __future__ import annotations
+
+
+def round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def check_tile(name: str, v, default: int, extent: int, align: int,
+               lim_align: int = None) -> int:
+    """Default-or-validate one tile param against a problem extent.
+
+    None -> ``min(default, round_up(extent, lim_align))`` (the legal
+    clamped default).  An explicit value must be a positive multiple of
+    ``align`` no larger than the padded extent, else ValueError.
+    ``lim_align`` (default ``align``) sets the padding granularity of the
+    extent cap separately from the value's own alignment — decode
+    attention caps ``bs`` at the lane-padded cache length while accepting
+    any positive block size.
+    """
+    lim = round_up(max(1, extent), lim_align if lim_align else align)
+    if v is None:
+        return min(default, lim)
+    v = int(v)
+    if v <= 0 or v % align or v > lim:
+        raise ValueError(
+            f"illegal tile {name}={v} for extent {extent}: must be a "
+            f"positive multiple of {align} and <= {lim} (clamp via "
+            f"kernels.registry.TileSpec.clamp_tile)")
+    return v
+
+
+def check_chunk(name: str, v, default: int, extent: int) -> int:
+    """Default-or-validate a chunk-style param that must divide its extent.
+
+    None -> ``min(default, extent)``; explicit values must be positive,
+    <= extent and divide it exactly, else ValueError.
+    """
+    if v is None:
+        v = min(default, extent)
+    v = int(v)
+    if v <= 0 or v > extent:
+        raise ValueError(
+            f"illegal tile {name}={v} for extent {extent}: must be in "
+            f"1..{extent} (clamp via kernels.registry.TileSpec.clamp_tile)")
+    if extent % v:
+        raise ValueError(
+            f"illegal tile {name}={v}: must divide extent {extent} exactly")
+    return v

@@ -23,15 +23,20 @@ from repro.kernels.winograd_conv.ref import conv2d_ref
 from repro.kernels.winograd_conv.winograd_conv import winograd_conv2d
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret",
-                                             "use_kernel"))
-def conv2d_op(x, w, *, stride: int = 1, interpret: bool = False,
+@functools.partial(jax.jit, static_argnames=("stride", "bm", "bn", "bk",
+                                             "interpret", "use_kernel"))
+def conv2d_op(x, w, *, stride: int = 1, bm: int = None, bn: int = None,
+              bk: int = None, interpret: bool = False,
               use_kernel: bool = True):
     kh, kw, cin, cout = w.shape
-    winograd_eligible = (kh == 3 and kw == 3 and stride == 1 and cout >= 128
+    # the registry owns the Winograd-selection threshold so planner
+    # availability predicates and this dispatch cannot drift apart
+    winograd_eligible = (kh == 3 and kw == 3 and stride == 1
+                         and cout >= registry.WINOGRAD_MIN_COUT
                          and x.shape[1] * x.shape[2] >= 1024 and cin >= 32)
     if use_kernel and winograd_eligible:
-        return winograd_conv2d(x, w, interpret=interpret)
+        return winograd_conv2d(x, w, bm=bm, bn=bn, bk=bk,
+                               interpret=interpret)
     return conv2d_ref(x, w, stride=stride)
 
 
@@ -41,9 +46,14 @@ def _crop_to_declared(y, op):
     return y[:, :op.H_out, :op.W_out, :]
 
 
-def _conv_pallas(x, w, op, *, interpret: bool = False):
+def _conv_pallas(x, w, op, *, interpret: bool = False, tile=None):
+    if tile is None:
+        return _crop_to_declared(
+            conv2d_op(x, w, stride=op.S, interpret=interpret), op)
+    v = registry.resolve_tile(op, tile).as_dict()
     return _crop_to_declared(
-        conv2d_op(x, w, stride=op.S, interpret=interpret), op)
+        conv2d_op(x, w, stride=op.S, bm=v["bm"], bn=v["bn"], bk=v["bk"],
+                  interpret=interpret), op)
 
 
 def _conv_oracle(x, w, op):

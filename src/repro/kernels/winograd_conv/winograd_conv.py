@@ -22,6 +22,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiles import check_tile as _check_tile
+
 # F(2x2, 3x3) transform matrices (Lavin & Gray 2016)
 _BT = np.array([[1, 0, -1, 0],
                 [0, 1, 1, 0],
@@ -50,15 +52,20 @@ def _hadamard_matmul_kernel(u_ref, v_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
-def hadamard_matmul(u: jax.Array, v: jax.Array, *, bm: int = 128,
-                    bn: int = 128, bk: int = 256,
+def hadamard_matmul(u: jax.Array, v: jax.Array, *, bm: int = None,
+                    bn: int = None, bk: int = None,
                     interpret: bool = False) -> jax.Array:
-    """M[g] = U[g] @ V[g] for g in [0, 16).  u: (16,P,K); v: (16,K,N)."""
+    """M[g] = U[g] @ V[g] for g in [0, 16).  u: (16,P,K); v: (16,K,N).
+
+    None tile params resolve to the default blocking clamped to the
+    problem extents; explicit values must already be legal (see
+    kernels.tiles.check_tile) or ValueError is raised.
+    """
     g, p, k = u.shape
     _, _, n = v.shape
-    bm = min(bm, -(-p // 8) * 8)
-    bn = min(bn, -(-n // 128) * 128)
-    bk = min(bk, -(-k // 128) * 128)
+    bm = _check_tile("bm", bm, 128, p, 8)
+    bn = _check_tile("bn", bn, 128, n, 128)
+    bk = _check_tile("bk", bk, 256, k, 128)
     pp, kp, np_ = (-p) % bm, (-k) % bk, (-n) % bn
     if pp or kp:
         u = jnp.pad(u, ((0, 0), (0, pp), (0, kp)))
@@ -82,7 +89,7 @@ def hadamard_matmul(u: jax.Array, v: jax.Array, *, bm: int = 128,
 
 
 def winograd_conv2d(x: jax.Array, w: jax.Array, *, interpret: bool = False,
-                    bm: int = 128, bn: int = 128, bk: int = 256
+                    bm: int = None, bn: int = None, bk: int = None
                     ) -> jax.Array:
     """3x3 stride-1 SAME conv via F(2x2,3x3).
 

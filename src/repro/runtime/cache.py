@@ -76,6 +76,7 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
                       mechanism: SyncMechanism = SyncMechanism.SVM_POLL,
                       step: int = 8, seed: int = 1,
                       bucket: str = "",
+                      tune: str = "", annotate=None,
                       cache: PlanCache) -> CoexecPlan:
     """End-to-end graph planning through the cache.
 
@@ -87,7 +88,13 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
     calibrators never alias stale plans.  `bucket` tags the (batch, seq)
     serving bucket a portfolio entry was compiled for; it folds into the
     digest (omitted when empty, so unbucketed keys are unchanged) and lets
-    portfolio compiles warm-hit across processes.
+    portfolio compiles warm-hit across processes.  `tune` tags plans whose
+    decisions carry autotuned tile configs (the tune-cache version, see
+    `runtime.autotune.tune_cache_version`); it folds into the digest the
+    same way, so tuned and untuned plans never alias, and `annotate` — a
+    plan -> plan hook applied on a miss before the plan is stored — is
+    where the tune pass attaches its tiles, so warm hits skip tuning
+    entirely.
     """
     prov = PlanProvenance(
         device=gpu_pred.device, threads=threads, mechanism=mechanism.value,
@@ -96,7 +103,7 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
         predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
         planner=PLANNER_PREDICTOR,
         calibration=calibration_version(cpu_pred, gpu_pred),
-        bucket=bucket)
+        bucket=bucket, tune=tune)
     hit = cache.get(prov)
     if hit is not None:
         return hit
@@ -106,7 +113,9 @@ def plan_graph_cached(graph: Graph, cpu_pred, gpu_pred, *,
                                   step=step, seed=seed,
                                   pred_checksum=prov.predictor_checksum,
                                   calibration=prov.calibration,
-                                  bucket=bucket)
+                                  bucket=bucket, tune=tune)
+    if annotate is not None:
+        plan = annotate(plan)
     cache.put(plan)
     return plan
 
@@ -135,6 +144,7 @@ def partition_ops_plan_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
                               mechanism: SyncMechanism =
                               SyncMechanism.SVM_POLL,
                               step: int = 8,
+                              tune: str = "", annotate=None,
                               cache: PlanCache) -> CoexecPlan:
     """Predictor-driven partitioning of a bare op list through the cache,
     returned as the full `CoexecPlan` artifact (the Table 2 sweeps and
@@ -150,7 +160,8 @@ def partition_ops_plan_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
         step=step, seed=0, network_fingerprint=network_fingerprint(units),
         predictor_checksum=predictor_checksum(cpu_pred, gpu_pred),
         planner=PLANNER_PREDICTOR,
-        calibration=calibration_version(cpu_pred, gpu_pred))
+        calibration=calibration_version(cpu_pred, gpu_pred),
+        tune=tune)
     hit = cache.get(prov)
     if hit is not None:
         return hit
@@ -158,6 +169,8 @@ def partition_ops_plan_cached(ops: Sequence[Op], cpu_pred, gpu_pred, *,
                                         mechanism=mechanism, step=step)
     plan = CoexecPlan(provenance=prov,
                       schedule=build_schedule(units, decisions))
+    if annotate is not None:
+        plan = annotate(plan)
     cache.put(plan)
     return plan
 
@@ -178,6 +191,7 @@ def grid_plan_graph_cached(graph: Graph, device: str, threads: int, *,
                            mechanism: SyncMechanism =
                            SyncMechanism.SVM_POLL,
                            step: int = 8, seed: int = 0,
+                           tune: str = "", annotate=None,
                            cache: PlanCache) -> CoexecPlan:
     """Measurement-driven (oracle) planning of a graph through the cache;
     keyed by planner="grid" with no predictor checksum (none is involved).
@@ -186,7 +200,7 @@ def grid_plan_graph_cached(graph: Graph, device: str, threads: int, *,
     prov = PlanProvenance(
         device=device, threads=threads, mechanism=mechanism.value,
         step=step, seed=seed, network_fingerprint=graph.fingerprint(),
-        predictor_checksum="", planner=PLANNER_GRID)
+        predictor_checksum="", planner=PLANNER_GRID, tune=tune)
     hit = cache.get(prov)
     if hit is not None:
         return hit
@@ -194,7 +208,10 @@ def grid_plan_graph_cached(graph: Graph, device: str, threads: int, *,
                              step=step, seed=seed)
     plan = plan_from_graph_report(graph, report, mechanism=mechanism,
                                   step=step, seed=seed, pred_checksum="",
-                                  planner=PLANNER_GRID, with_totals=False)
+                                  planner=PLANNER_GRID, tune=tune,
+                                  with_totals=False)
+    if annotate is not None:
+        plan = annotate(plan)
     cache.put(plan)
     return plan
 

@@ -354,7 +354,8 @@ class PlanExecutor:
         """Unsplit execution through the registry lowering."""
         low = registry.get_lowering(spec.unit)
         if self.use_pallas:
-            return low.pallas(x, w, spec.op, interpret=self.interpret)
+            return low.pallas(x, w, spec.op, interpret=self.interpret,
+                              tile=spec.tile)
         return low.oracle(x, w, spec.op)
 
     def _chains(self, act: _Stacked, spec: ExecSpec) -> bool:
@@ -507,7 +508,8 @@ class PlanExecutor:
                                     spec.c_fast, gather=False,
                                     x_plan=x_plan,
                                     use_pallas=self.use_pallas,
-                                    interpret=self.interpret)
+                                    interpret=self.interpret,
+                                    tile=spec.tile)
                         if spec.axis == "kv-block":
                             # non-stackable: the lowering merged its
                             # softmax partials and materialized internally
@@ -606,7 +608,8 @@ class PlanExecutor:
                     out = low.run(self._adapt(src_val, spec), packed,
                                   split, self.mesh, spec.op, spec.c_fast,
                                   use_pallas=self.use_pallas,
-                                  interpret=self.interpret)
+                                  interpret=self.interpret,
+                                  tile=spec.tile)
                 else:
                     out = self._dense(self._adapt(src_val, spec),
                                       self.params[pos[nid]], spec)

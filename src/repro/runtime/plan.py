@@ -37,8 +37,10 @@ from repro.core.planner import GraphPlanReport, PlanReport
 from repro.core.sync import SyncMechanism
 from repro.core.types import Op
 from repro.graph.ir import Graph, Segment, from_units
-from repro.kernels.registry import (op_from_json, op_kind,  # noqa: F401 —
-                                    op_label, op_to_json,   # re-exported
+from repro.kernels.registry import (TileConfig,             # noqa: F401 —
+                                    op_from_json, op_kind,  # re-exported
+                                    op_label, op_to_json, resolve_tile,
+                                    tile_from_json, tile_to_json,
                                     validate_axis_split)
 
 PLAN_SCHEMA_VERSION = 1
@@ -55,6 +57,11 @@ def _validate_decision(dec: PartitionDecision) -> PartitionDecision:
     # or stale plan file
     if dec.axis not in ("channel", "none"):
         validate_axis_split(dec.op, dec.axis, dec.c_gpu)
+    # same discipline for tiles: an illegal tile (misaligned, over the
+    # padded extent, over the VMEM budget) cannot enter a schedule or load
+    # from a tampered plan file
+    if dec.tile is not None:
+        resolve_tile(dec.op, dec.tile)
     return dec
 
 
@@ -67,14 +74,22 @@ def decision_to_json(dec: PartitionDecision) -> Dict[str, Any]:
     # (every conv/linear schedule ever written) stays byte-identical
     if dec.axis != "channel":
         d["axis"] = dec.axis
+    # likewise the tile key: omitted for default blocking so every
+    # pre-autotune plan file (and cache entry) stays byte-identical
+    if dec.tile is not None:
+        d["tile"] = tile_to_json(dec.tile)
     return d
 
 
 def decision_from_json(d: Dict[str, Any]) -> PartitionDecision:
+    op = op_from_json(d["op"])
+    tile = (tile_from_json(op_kind(op), d["tile"])
+            if "tile" in d else None)
     return _validate_decision(PartitionDecision(
-        op=op_from_json(d["op"]), c_cpu=d["c_cpu"], c_gpu=d["c_gpu"],
+        op=op, c_cpu=d["c_cpu"], c_gpu=d["c_gpu"],
         pred_cpu_us=d["pred_cpu_us"], pred_gpu_us=d["pred_gpu_us"],
-        pred_total_us=d["pred_total_us"], axis=d.get("axis", "channel")))
+        pred_total_us=d["pred_total_us"], axis=d.get("axis", "channel"),
+        tile=tile))
 
 
 # ------------------------------------------------------------- provenance
@@ -127,6 +142,11 @@ def predictor_checksum(*predictors) -> str:
             p = p.inner
         if hasattr(p, "models"):                     # LatencyPredictor
             h.update(f"{p.device}/{p.backend}/{p.whitebox}".encode())
+            # tile-aware predictors see different feature vectors, so they
+            # must never alias a tile-blind bundle's plans; the tag is
+            # appended only when set so pre-tile checksums are unchanged
+            if getattr(p, "tiles", False):
+                h.update(b"/tiles")
             for kern in sorted(p.models):
                 h.update(kern.encode())
                 _hash_gbdt(h, p.models[kern])
@@ -175,16 +195,19 @@ class PlanProvenance:
     schema_version: int = PLAN_SCHEMA_VERSION
     calibration: str = ""         # Calibrator version ("" = uncalibrated)
     bucket: str = ""              # (batch, seq) bucket tag ("" = unbucketed)
+    tune: str = ""                # tune-cache version ("" = untuned plan)
 
     def _canonical(self) -> Dict[str, Any]:
-        # the calibration/bucket fields are omitted when empty so legacy
-        # keys (and stored plan JSON) stay bit-identical to the older
-        # formats — existing on-disk caches remain warm
+        # the calibration/bucket/tune fields are omitted when empty so
+        # legacy keys (and stored plan JSON) stay bit-identical to the
+        # older formats — existing on-disk caches remain warm
         d = dataclasses.asdict(self)
         if not d.get("calibration"):
             d.pop("calibration", None)
         if not d.get("bucket"):
             d.pop("bucket", None)
+        if not d.get("tune"):
+            d.pop("tune", None)
         return d
 
     @property
@@ -228,6 +251,9 @@ class ExecSpec:
     c_slow: int = 0
     pred_total_us: float = 0.0
     axis: str = "channel"
+    #: autotuned tile config for the op's Pallas kernel (None = default
+    #: blocking); part of equality — a retuned tile is a different program
+    tile: Optional[TileConfig] = None
     node_id: str = dataclasses.field(default="", compare=False)
     segment: int = dataclasses.field(default=-1, compare=False)
 
@@ -245,7 +271,7 @@ def decision_to_spec(dec: PartitionDecision, node_id: str = "") -> ExecSpec:
     group, CPU share -> slow group, mirroring the TPU transfer)."""
     return ExecSpec(unit=op_kind(dec.op), op=dec.op, c_fast=dec.c_gpu,
                     c_slow=dec.c_cpu, pred_total_us=dec.pred_total_us,
-                    axis=dec.axis, node_id=node_id)
+                    axis=dec.axis, tile=dec.tile, node_id=node_id)
 
 
 def spec_label(spec: ExecSpec) -> str:
@@ -256,7 +282,10 @@ def spec_label(spec: ExecSpec) -> str:
         return f"pool {spec.pool_bytes}B"
     if spec.unit == "add":
         return f"add {spec.node_id}".rstrip()
-    return op_label(spec.op)
+    label = op_label(spec.op)
+    if spec.tile is not None:
+        label += f" tile[{spec.tile.label()}]"
+    return label
 
 
 # ------------------------------------------------------------------- plan
@@ -529,6 +558,7 @@ def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
                            PLANNER_PREDICTOR,
                            calibration: str = "",
                            bucket: str = "",
+                           tune: str = "",
                            with_totals: bool = True) -> CoexecPlan:
     """Assemble the compiled plan of a `plan_graph`/`grid_plan_graph` run
     (provenance fingerprint = the graph's content-addressed digest)."""
@@ -537,7 +567,7 @@ def plan_from_graph_report(graph: Graph, report: GraphPlanReport, *,
                           network_fingerprint=graph.fingerprint(),
                           predictor_checksum=pred_checksum,
                           planner=planner, calibration=calibration,
-                          bucket=bucket)
+                          bucket=bucket, tune=tune)
     return CoexecPlan(
         provenance=prov,
         schedule=build_graph_schedule(graph, report.decisions,

@@ -296,7 +296,8 @@ def _emit(exe, instrs: List[Dict[str, Any]],
                                     spec.c_fast, gather=False,
                                     x_plan=x_plan,
                                     use_pallas=exe.use_pallas,
-                                    interpret=exe.interpret)
+                                    interpret=exe.interpret,
+                                    tile=spec.tile)
                     out = _Stacked(y, split, ins["shape"])
                 else:
                     out = exe._dense(exe._adapt(plain(ins["src"]), spec),

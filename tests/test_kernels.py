@@ -16,6 +16,13 @@ def _rand(rng, shape, dtype):
     return jnp.asarray(x, dtype)
 
 
+def _legal(v, extent, align):
+    """Clamp a requested tile param to the padded problem extent — explicit
+    tiles must be legal now (the kernels raise instead of silently
+    rewriting oversize requests; see kernels.tiles.check_tile)."""
+    return min(v, -(-extent // align) * align)
+
+
 # ------------------------------------------------------------ split_matmul
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("m,k,n,c0,width", [
@@ -29,7 +36,8 @@ def test_split_matmul_matches_ref(m, k, n, c0, width, dtype):
     rng = np.random.default_rng(hash((m, k, n, c0, width)) % 2**32)
     x = _rand(rng, (m, k), dtype)
     w = _rand(rng, (k, n), dtype)
-    got = split_matmul_op(x, w, c0, width, bm=32, bn=128, bk=128,
+    got = split_matmul_op(x, w, c0, width, bm=_legal(32, m, 8),
+                          bn=_legal(128, n, 128), bk=_legal(128, k, 128),
                           interpret=True)
     want = split_matmul_ref(x, w, c0, width)
     tol = 2e-5 if dtype == jnp.float32 else 3e-2
@@ -104,7 +112,10 @@ def test_winograd_conv_matches_direct(b, h, w, cin, cout, dtype):
     rng = np.random.default_rng(hash((b, h, w, cin, cout)) % 2**32)
     x = _rand(rng, (b, h, w, cin), dtype) * 0.3
     wgt = _rand(rng, (3, 3, cin, cout), dtype) * 0.3
-    got = winograd_conv2d(x, wgt, interpret=True, bm=32, bn=128, bk=128)
+    tiles = -(-h // 2) * -(-w // 2)
+    got = winograd_conv2d(x, wgt, interpret=True, bm=_legal(32, tiles, 8),
+                          bn=_legal(128, cout, 128),
+                          bk=_legal(128, cin, 128))
     want = conv2d_ref(x, wgt)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
