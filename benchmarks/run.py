@@ -141,6 +141,10 @@ def main(argv=None) -> int:
             name, rows, extra={"wallclock_s": round(wall, 2)},
             measurements=measurements_fn() if measurements_fn else None)
         print(f"# wrote {path}")
+    from repro.analysis import rejections
+    if rejections.total():
+        # stale/corrupt cache entries the suites hit (each was recompiled)
+        print(f"# {rejections.summary()}")
     if regressions:
         print(f"# {len(regressions)} metric(s) regressed beyond "
               f"--tolerance: {', '.join(regressions)}")

@@ -1,0 +1,76 @@
+"""Static analysis over plan artifacts and the repo's own contracts.
+
+`analysis.verify` proves co-execution invariants over serialized plans
+without importing jax or executing anything; `analysis.lint` enforces
+the repo contracts (import-light modules, registry completeness,
+no-silent-clamp) over the source tree.  Both back the `repro verify` /
+`repro lint` CLI commands and the strict-load paths in `runtime.plan`,
+`runtime.cache`, and `api`.
+"""
+import logging
+from typing import Dict, List, Tuple
+
+from repro.analysis.verify import (RULES, SEV_ERROR, SEV_INFO, SEV_WARNING,
+                                   Diagnostic, PlanStats, VerificationError,
+                                   errors, plan_stats, raise_on_error,
+                                   verify_artifact, verify_bench_report,
+                                   verify_path, verify_plan,
+                                   verify_portfolio, verify_tune_entry)
+
+__all__ = [
+    "RULES", "SEV_ERROR", "SEV_INFO", "SEV_WARNING",
+    "Diagnostic", "PlanStats", "VerificationError",
+    "errors", "plan_stats", "raise_on_error",
+    "verify_artifact", "verify_bench_report", "verify_path",
+    "verify_plan", "verify_portfolio", "verify_tune_entry",
+    "RejectionLog", "rejections",
+]
+
+_log = logging.getLogger("repro.analysis")
+
+
+class RejectionLog:
+    """Process-wide record of cache entries rejected by verification.
+
+    PlanCache/TuneCache historically degraded corrupt or mismatched
+    entries to a *silent* miss; this log records which rule (or which
+    provenance/key field) failed, warns once per digest, and lets the
+    CLI surface counts (`repro plan -v`, bench run summaries).
+    """
+
+    def __init__(self):
+        self._seen: Dict[str, Tuple[str, str]] = {}   # digest -> (rule, why)
+        self._counts: Dict[str, int] = {}             # rule -> rejections
+
+    def record(self, digest: str, rule: str, detail: str = "") -> None:
+        if digest in self._seen:
+            return                         # warn once per digest
+        self._seen[digest] = (rule, detail)
+        self._counts[rule] = self._counts.get(rule, 0) + 1
+        why = f": {detail}" if detail else ""
+        _log.warning("cache entry %s rejected by %s%s", digest, rule, why)
+
+    def counts(self) -> Dict[str, int]:
+        return dict(self._counts)
+
+    def total(self) -> int:
+        return sum(self._counts.values())
+
+    def entries(self) -> List[Tuple[str, str, str]]:
+        return [(digest, rule, detail)
+                for digest, (rule, detail) in sorted(self._seen.items())]
+
+    def summary(self) -> str:
+        if not self._counts:
+            return "cache rejections: none"
+        parts = ", ".join(f"{rule} x{n}"
+                          for rule, n in sorted(self._counts.items()))
+        return f"cache rejections: {self.total()} ({parts})"
+
+    def clear(self) -> None:
+        self._seen.clear()
+        self._counts.clear()
+
+
+#: process-wide singleton the cache layers report into
+rejections = RejectionLog()

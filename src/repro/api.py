@@ -605,6 +605,15 @@ class CompiledNetwork:
                      f"end-to-end {self.plan.end_to_end_us / 1e3:.1f} ms "
                      f"({speedup:.2f}x)")
         lines.append(tail)
+        from repro.analysis import errors as diag_errors, verify_plan
+        diags = verify_plan(self.plan, stats=False)
+        errs = diag_errors(diags)
+        if errs:
+            lines.append(f"  verify: {len(errs)} error(s) — {errs[0]}")
+        else:
+            warns = sum(1 for d in diags if d.severity == "warning")
+            lines.append("  verify: clean"
+                         + (f" ({warns} warnings)" if warns else ""))
         return "\n".join(lines)
 
     # ------------------------------------------------------------- codecs
@@ -616,7 +625,8 @@ class CompiledNetwork:
         return doc
 
     @staticmethod
-    def from_json(doc: Dict[str, Any]) -> "CompiledNetwork":
+    def from_json(doc: Dict[str, Any], *,
+                  verify: bool = True) -> "CompiledNetwork":
         if doc.get("format") != ARTIFACT_FORMAT:
             raise ValueError(f"not a {ARTIFACT_FORMAT} artifact "
                              f"(format={doc.get('format')!r})")
@@ -626,7 +636,8 @@ class CompiledNetwork:
         if doc.get("checksum") != _artifact_checksum(doc):
             raise ValueError("artifact checksum mismatch: the file was "
                              "modified after it was saved")
-        return CompiledNetwork(plan=CoexecPlan.from_json(doc["plan"]),
+        return CompiledNetwork(plan=CoexecPlan.from_json(doc["plan"],
+                                                         verify=verify),
                                target=Target.from_json(doc["target"]),
                                mode=doc["mode"])
 
@@ -639,8 +650,14 @@ class CompiledNetwork:
         return path
 
     @staticmethod
-    def load(path: Union[str, Path]) -> "CompiledNetwork":
-        return CompiledNetwork.from_json(json.loads(Path(path).read_text()))
+    def load(path: Union[str, Path], *,
+             verify: bool = True) -> "CompiledNetwork":
+        """Load a saved artifact.  ``verify=True`` (default) statically
+        verifies the embedded plan (`repro.analysis`) and raises
+        `VerificationError` on error diagnostics; pass ``verify=False``
+        to inspect a quarantined artifact anyway."""
+        return CompiledNetwork.from_json(json.loads(Path(path).read_text()),
+                                         verify=verify)
 
 
 # ---------------------------------------------------------- plan portfolio
@@ -742,7 +759,8 @@ class PlanPortfolio:
         return doc
 
     @staticmethod
-    def from_json(doc: Dict[str, Any]) -> "PlanPortfolio":
+    def from_json(doc: Dict[str, Any], *,
+                  verify: bool = True) -> "PlanPortfolio":
         if doc.get("format") != PORTFOLIO_FORMAT:
             raise ValueError(f"not a {PORTFOLIO_FORMAT} artifact "
                              f"(format={doc.get('format')!r})")
@@ -754,7 +772,7 @@ class PlanPortfolio:
                              "modified after it was saved")
         entries = {
             Bucket(e["batch"], e["seq"]):
-                CompiledNetwork.from_json(e["artifact"])
+                CompiledNetwork.from_json(e["artifact"], verify=verify)
             for e in doc["entries"]}
         return PlanPortfolio(model=doc["model"],
                              target=Target.from_json(doc["target"]),
@@ -767,8 +785,12 @@ class PlanPortfolio:
         return path
 
     @staticmethod
-    def load(path: Union[str, Path]) -> "PlanPortfolio":
-        return PlanPortfolio.from_json(json.loads(Path(path).read_text()))
+    def load(path: Union[str, Path], *,
+             verify: bool = True) -> "PlanPortfolio":
+        """Load a saved portfolio; ``verify=False`` skips the static
+        verification of every embedded plan."""
+        return PlanPortfolio.from_json(json.loads(Path(path).read_text()),
+                                       verify=verify)
 
 
 def _portfolio_checksum(doc: Dict[str, Any]) -> str:

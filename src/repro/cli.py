@@ -13,6 +13,13 @@ Subcommands:
   * `tune`      — measured Pallas tile-config search for a network's ops,
                   cached in the on-disk `TuneCache`; `plan/execute
                   --tune` attach the winners to compiled plans.
+  * `verify`    — statically verify plan/portfolio/bench/tune artifacts
+                  (`repro.analysis`): schema discipline, axis/tile
+                  legality, segment invariants, provenance digests —
+                  without importing jax or executing anything.
+  * `lint`      — run the repo-contract linter over `src/repro`
+                  (import-light modules, registry completeness,
+                  no-silent-clamp).
   * `bench`     — forward to the paper benchmark driver (`benchmarks.run`).
   * `serve`     — forward to the serving launcher (`repro.launch.serve`):
                   the fixed-batch engine, or — with `--arrivals poisson
@@ -161,6 +168,12 @@ def _cmd_plan(args) -> int:
         print(f"  wrote artifact {args.save}")
     if args.explain:
         print(compiled.explain())
+    if args.verbose:
+        from repro.analysis import rejections
+        print(f"  {rejections.summary()}")
+        for digest, rule, detail in rejections.entries():
+            why = f": {detail}" if detail else ""
+            print(f"    {digest} rejected by {rule}{why}")
     return 0
 
 
@@ -295,6 +308,48 @@ def _cmd_tune(args) -> int:
     return 0
 
 
+def _cmd_verify(args) -> int:
+    """Statically verify artifacts on disk; exit 1 on error-severity
+    diagnostics (warnings and info never fail the run)."""
+    from repro.analysis import SEV_ERROR, SEV_INFO, SEV_WARNING, verify_path
+    paths = [Path(p) for p in args.paths]
+    if args.all_artifacts:
+        for d in ("reports/plans", "reports/tune", "reports/bench"):
+            paths.extend(sorted(Path(d).glob("*.json")))
+    if not paths:
+        print("error: nothing to verify (pass artifact paths or "
+              "--all-artifacts)", file=sys.stderr)
+        return 2
+    n_err = n_warn = 0
+    for p in paths:
+        kind, diags = verify_path(p, stats=args.verbose)
+        errs = [d for d in diags if d.severity == SEV_ERROR]
+        warns = [d for d in diags if d.severity == SEV_WARNING]
+        n_err += len(errs)
+        n_warn += len(warns)
+        print(f"{'FAIL' if errs else 'ok':4s} {kind:9s} {p}")
+        shown = errs + warns
+        if args.verbose:
+            shown += [d for d in diags if d.severity == SEV_INFO]
+        for d in shown:
+            print(f"       {d}")
+    print(f"verified {len(paths)} artifact(s): {n_err} error(s), "
+          f"{n_warn} warning(s)")
+    return 1 if n_err else 0
+
+
+def _cmd_lint(args) -> int:
+    """Run the repo-contract linter; exit 1 on any finding."""
+    from repro.analysis.lint import LINT_RULES, lint_repo, package_root
+    pkg = Path(args.src) if args.src else package_root()
+    diags = lint_repo(pkg)
+    for d in diags:
+        print(d)
+    rules = ", ".join(sorted(LINT_RULES))
+    print(f"lint {pkg}: {len(diags)} finding(s) across [{rules}]")
+    return 1 if diags else 0
+
+
 def _cmd_bench(rest: Sequence[str]) -> int:
     # benchmarks/ lives at the repo root (it is not an installed package);
     # running from the checkout works directly, an installed interpreter
@@ -342,6 +397,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              "(plan + target + checksum) to this path")
     p_plan.add_argument("--explain", action="store_true",
                         help="print the per-op decision table")
+    p_plan.add_argument("-v", "--verbose", action="store_true",
+                        help="also print cache-rejection counts (which "
+                             "verifier rule each stale entry failed)")
 
     p_exec = sub.add_parser(
         "execute", help="execute a compiled plan end to end and report "
@@ -387,6 +445,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_tune.add_argument("--reps", type=int, default=2,
                         help="timed repetitions per candidate (median)")
 
+    p_verify = sub.add_parser(
+        "verify", help="statically verify plan/portfolio/bench/tune "
+                       "artifacts without importing jax or executing "
+                       "anything")
+    p_verify.add_argument("paths", nargs="*",
+                          help="artifact JSON files (plan, CompiledNetwork "
+                               "artifact, portfolio, bench report, tune "
+                               "entry — dispatched by document shape)")
+    p_verify.add_argument("--all-artifacts", action="store_true",
+                          help="scan reports/plans, reports/tune and "
+                               "reports/bench")
+    p_verify.add_argument("-v", "--verbose", action="store_true",
+                          help="also print info diagnostics (static "
+                               "resource accounting)")
+
+    p_lint = sub.add_parser(
+        "lint", help="run the repo-contract linter (import-light, "
+                     "registry completeness, no-silent-clamp)")
+    p_lint.add_argument("--src", default=None,
+                        help="package directory to lint (default: the "
+                             "installed repro package)")
+
     # bench/serve exist here only so `python -m repro --help` lists them;
     # their real dispatch is the verbatim-forward intercept above
     sub.add_parser("bench",
@@ -406,6 +486,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             return _cmd_calibrate(args)
         if args.cmd == "tune":
             return _cmd_tune(args)
+        if args.cmd == "verify":
+            return _cmd_verify(args)
+        if args.cmd == "lint":
+            return _cmd_lint(args)
         return _cmd_execute(args)
     except _UserInputError as e:
         # e.g. an unknown --network/--model: surface the registry listing

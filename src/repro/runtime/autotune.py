@@ -98,17 +98,29 @@ class TuneCache:
         return self.root / f"{key.key}.json"
 
     def get(self, key: TuneKey) -> Optional[registry.TileConfig]:
+        from repro.analysis import rejections
         path = self.path_for(key)
         if path.exists():
             try:
                 doc = json.loads(path.read_text())
-                if doc.get("key") == key._canonical():
+                want = key._canonical()
+                got = doc.get("key")
+                if got == want:
                     kind = dict(key.op_json)["kind"]
                     tile = registry.tile_from_json(kind, doc["tile"])
                     self.hits += 1
                     return tile
-            except (ValueError, KeyError, TypeError):
-                pass                       # corrupt/stale: fall through
+                fields = sorted(set(want) | set(got or {})) \
+                    if isinstance(got, dict) else []
+                stale = [f for f in fields
+                         if (got or {}).get(f) != want.get(f)]
+                rejections.record(path.stem, "provenance.mismatch",
+                                  f"stale tune key fields: {stale}")
+            except (ValueError, KeyError, TypeError) as e:
+                # corrupt entry: treat as a miss, but say which field/rule
+                rejections.record(path.stem, "tile.legality"
+                                  if "tile" in str(e).lower()
+                                  else "schema.malformed", str(e))
         self.misses += 1
         return None
 

@@ -48,15 +48,28 @@ class PlanCache:
         return self.root / f"{provenance.key}.json"
 
     def get(self, provenance: PlanProvenance) -> Optional[CoexecPlan]:
+        from repro.analysis import VerificationError, rejections
         path = self.path_for(provenance)
         if path.exists():
             try:
                 plan = CoexecPlan.load(path)
-            except (ValueError, KeyError, TypeError):
+            except VerificationError as e:
+                first = e.diagnostics[0]
+                rejections.record(path.stem, first.rule, first.message)
                 plan = None
-            if plan is not None and plan.provenance == provenance:
-                self.hits += 1
-                return plan
+            except (ValueError, KeyError, TypeError) as e:
+                rejections.record(path.stem, "schema.malformed", str(e))
+                plan = None
+            if plan is not None:
+                if plan.provenance == provenance:
+                    self.hits += 1
+                    return plan
+                import dataclasses
+                fields = [f.name for f in dataclasses.fields(provenance)
+                          if getattr(plan.provenance, f.name, None) !=
+                          getattr(provenance, f.name, None)]
+                rejections.record(path.stem, "provenance.mismatch",
+                                  f"stale fields: {fields}")
         self.misses += 1
         return None
 

@@ -465,7 +465,20 @@ class CoexecPlan:
         return doc
 
     @staticmethod
-    def from_json(d: Dict[str, Any]) -> "CoexecPlan":
+    def from_json(d: Dict[str, Any], *, verify: bool = True) -> "CoexecPlan":
+        """Decode a plan document.
+
+        ``verify=True`` (default) statically verifies the document first
+        (`repro.analysis.verify_plan`) and raises `VerificationError` on
+        error-severity diagnostics, so a corrupted or hand-edited plan is
+        rejected at load time rather than at first execution.  Pass
+        ``verify=False`` to load anyway (e.g. to inspect a quarantined
+        artifact).
+        """
+        if verify:
+            from repro.analysis import raise_on_error, verify_plan
+            raise_on_error(verify_plan(d, stats=False),
+                           "plan document")
         rep = d.get("report") or {}
         return CoexecPlan(provenance=PlanProvenance.from_json(d["provenance"]),
                           schedule=d["schedule"],
@@ -479,8 +492,8 @@ class CoexecPlan:
         return json.dumps(self.to_json(), indent=1)
 
     @staticmethod
-    def loads(text: str) -> "CoexecPlan":
-        return CoexecPlan.from_json(json.loads(text))
+    def loads(text: str, *, verify: bool = True) -> "CoexecPlan":
+        return CoexecPlan.from_json(json.loads(text), verify=verify)
 
     def save(self, path: Path) -> None:
         path = Path(path)
@@ -488,8 +501,8 @@ class CoexecPlan:
         path.write_text(self.dumps())
 
     @staticmethod
-    def load(path: Path) -> "CoexecPlan":
-        return CoexecPlan.loads(Path(path).read_text())
+    def load(path: Path, *, verify: bool = True) -> "CoexecPlan":
+        return CoexecPlan.loads(Path(path).read_text(), verify=verify)
 
 
 def build_schedule(units: Sequence[Unit],
@@ -545,10 +558,17 @@ def segments_json(graph: Graph,
     """The plan's embedded segment-partition metadata: `graph.segments`
     over the co-executed node set of `decisions` (the fused executor's
     boundary contract, stored so `.explain()` and tooling can print it
-    without re-deriving)."""
+    without re-deriving).
+
+    Unit-chain graphs canonicalize segment node ids to positions
+    ("n{i}"), matching the id-free schedule `build_graph_schedule` emits
+    for them — the embedded metadata must reference the ids a reload
+    reconstructs, not the pre-canonicalization spellings."""
     coexec = {nid for nid, d in decisions.items()
               if d.c_cpu > 0 and d.c_gpu > 0 and d.axis == "channel"}
-    return [{"kind": s.kind, "nodes": list(s.node_ids)}
+    canon = {n.id: f"n{i}" for i, n in enumerate(graph)} \
+        if graph.is_unit_chain() else {n.id: n.id for n in graph}
+    return [{"kind": s.kind, "nodes": [canon[nid] for nid in s.node_ids]}
             for s in graph.segments(coexec)]
 
 

@@ -33,13 +33,11 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Any, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import ModelConfig
-
 if TYPE_CHECKING:
+    import jax
+    from repro.models.config import ModelConfig
     from repro.runtime.executor import ExecutionReport, PlanExecutor
     from repro.runtime.plan import CoexecPlan
 
@@ -67,6 +65,8 @@ def sample_tokens(rng, logits: jax.Array, temperatures
     (<= 0 = greedy).  Returns (tokens, rng) — the key is split (and thus
     consumed) only when some row actually samples, so all-greedy batches
     are rng-invariant."""
+    import jax
+    import jax.numpy as jnp
     temps = jnp.asarray(temperatures, jnp.float32)
     if temps.ndim == 0:
         temps = jnp.full((logits.shape[0],), temps)
@@ -85,6 +85,7 @@ class ServingEngine:
                  max_batch: int = 4, max_len: int = 128, seed: int = 0,
                  coexec_plan: Optional["CoexecPlan"] = None,
                  compiled=None, measurement_store=None):
+        import jax
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -194,6 +195,7 @@ class ServingEngine:
         return out
 
     def _run_batch(self, batch: List[Request]) -> List[Completion]:
+        import jax.numpy as jnp
         b = len(batch)
         t = max(len(r.prompt) for r in batch)
         toks = np.zeros((b, t), np.int32)

@@ -328,6 +328,21 @@ class ContinuousScheduler:
             new_compiled, diff = compiled.replan(cal, cache=self.plan_cache)
         else:
             new_compiled, diff = compiled.replan(cal)
+        # static verification gate: a calibration-induced illegal decision
+        # must never reach the slot pool.  On error diagnostics the old
+        # plan keeps serving; the monitor still resets so the same drifted
+        # window cannot re-trigger a doomed replan every step.
+        from repro.analysis import errors as diag_errors, verify_plan
+        bad = diag_errors(verify_plan(new_compiled.plan, stats=False))
+        if bad:
+            import logging
+            logging.getLogger("repro.serving").warning(
+                "replan for %s rejected by static verification: %s",
+                bucket.tag, bad[0])
+            self._monitor(bucket).reset()
+            self._recent_reports[bucket] = []
+            self._fid_log[bucket] = []
+            return
         pre = float(np.mean(self._fid_log[bucket]
                             [-self.config.fidelity_window:]))
         post_report = self._profile_scaled(new_compiled, now)

@@ -1,0 +1,666 @@
+"""Tests for `repro.analysis` (PR 10): the static plan/IR verifier, the
+repo-contract linter, the strict-load wiring, cache rejection logging,
+and the scheduler's replan verification gate.
+
+The core of the file is the mutation harness: known-good plan documents
+(resnet18 unit chain, tiny_decoder with a head split, a tuned plan, a
+portfolio bucket) each get a catalog of single-field mutations applied,
+and the verifier must flag every one with the *correct* rule id —
+acceptance requires >= 95% caught; we assert 100%.
+"""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (RULES, VerificationError, errors, plan_stats,
+                            rejections, verify_artifact, verify_bench_report,
+                            verify_path, verify_plan, verify_portfolio,
+                            verify_tune_entry)
+from repro.analysis.lint import (lint_import_light, lint_repo,
+                                 lint_silent_clamp, package_root)
+from repro.core.networks import NETWORKS
+from repro.core.partitioner import PartitionDecision
+from repro.graph import from_model
+from repro.graph.ir import from_units
+from repro.kernels import registry
+from repro.runtime.plan import (CoexecPlan, PlanProvenance,
+                                build_graph_schedule, segments_json)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ------------------------------------------------------ known-good plans
+
+def _forced_plan(g, decisions, opaque=None):
+    prov = PlanProvenance(
+        device="moto2022", threads=3, mechanism="svm_poll", step=8, seed=1,
+        network_fingerprint=g.fingerprint(), predictor_checksum="")
+    return CoexecPlan(
+        provenance=prov,
+        schedule=build_graph_schedule(g, decisions, opaque or {}),
+        graph_json=None if g.is_unit_chain() else g.to_json(),
+        segments=segments_json(g, decisions))
+
+
+def _decisions(g, *, typed=False, opaque_attn=False):
+    decisions, opaque = {}, {}
+    for n in g:
+        if n.kind in ("linear", "conv"):
+            c = n.op.C_out
+            decisions[n.id] = PartitionDecision(
+                op=n.op, c_cpu=c // 4, c_gpu=c - c // 4,
+                pred_cpu_us=1.0, pred_gpu_us=1.0, pred_total_us=2.0)
+        elif n.kind == "attention":
+            if opaque_attn or not typed:
+                opaque[n.id] = 25.0
+            else:
+                decisions[n.id] = PartitionDecision(
+                    op=n.op.with_mode("streaming"), c_cpu=n.op.H // 2,
+                    c_gpu=n.op.H // 2, pred_cpu_us=1.0, pred_gpu_us=1.0,
+                    pred_total_us=2.0, axis="head")
+        elif n.kind == "ssm":
+            if typed:
+                decisions[n.id] = PartitionDecision(
+                    op=n.op.with_mode("recurrent"), c_cpu=n.op.H // 2,
+                    c_gpu=n.op.H // 2, pred_cpu_us=1.0, pred_gpu_us=1.0,
+                    pred_total_us=2.0, axis="ssm-state")
+            else:
+                opaque[n.id] = 25.0
+    return decisions, opaque
+
+
+@pytest.fixture(scope="module")
+def resnet_doc():
+    g = from_units(NETWORKS["resnet18"]())
+    return _forced_plan(g, *_decisions(g)).to_json()
+
+
+@pytest.fixture(scope="module")
+def decoder_doc():
+    g = from_model("tiny_decoder", cache_len=512)
+    return _forced_plan(g, *_decisions(g, typed=True)).to_json()
+
+
+@pytest.fixture(scope="module")
+def tuned_doc():
+    g = from_units(NETWORKS["vgg16"]())
+    decisions, opaque = _decisions(g)
+    # attach a legal non-default tile to one linear decision, the way
+    # annotate_plan_tiles does (winner != default blocking)
+    for n in g:
+        if n.kind != "linear":
+            continue
+        spec = registry.tile_spec("linear")
+        default = spec.default_config(n.op)
+        alt = next((c for c in spec.configs(n.op) if c != default), None)
+        if alt is None:
+            continue
+        d = decisions[n.id]
+        decisions[n.id] = PartitionDecision(
+            op=d.op, c_cpu=d.c_cpu, c_gpu=d.c_gpu,
+            pred_cpu_us=d.pred_cpu_us, pred_gpu_us=d.pred_gpu_us,
+            pred_total_us=d.pred_total_us, tile=alt)
+        break
+    else:
+        pytest.skip("no linear op with a second legal tile config")
+    plan = _forced_plan(g, decisions, opaque)
+    prov = plan.provenance
+    import dataclasses
+    plan = CoexecPlan(
+        provenance=dataclasses.replace(prov, tune="tune-v1.k1"),
+        schedule=plan.schedule, graph_json=plan.graph_json,
+        segments=plan.segments)
+    return plan.to_json()
+
+
+@pytest.fixture(scope="module")
+def portfolio_doc(resnet_doc):
+    import dataclasses
+
+    from repro.api import Bucket, CompiledNetwork, PlanPortfolio, Target
+    entries = {}
+    for batch, seq in ((1, 64), (4, 256)):
+        b = Bucket(batch, seq)
+        plan = CoexecPlan.from_json(copy.deepcopy(resnet_doc))
+        plan = CoexecPlan(
+            provenance=dataclasses.replace(plan.provenance, bucket=b.tag),
+            schedule=plan.schedule, graph_json=plan.graph_json,
+            segments=plan.segments)
+        entries[b] = CompiledNetwork(
+            plan=plan, target=Target(device="moto2022", threads=3))
+    return PlanPortfolio("resnet18", Target(device="moto2022", threads=3),
+                         entries).to_json()
+
+
+# --------------------------------------------------- clean-artifact checks
+
+def test_fresh_plans_verify_clean(resnet_doc, decoder_doc, tuned_doc):
+    for doc in (resnet_doc, decoder_doc, tuned_doc):
+        key = PlanProvenance.from_json(doc["provenance"]).key
+        diags = verify_plan(copy.deepcopy(doc), expect_key=key)
+        assert not errors(diags), [str(d) for d in errors(diags)]
+        # the info-severity resource accounting rides along
+        assert any(d.rule == "resource.accounting" for d in diags)
+
+
+def test_fresh_portfolio_verifies_clean(portfolio_doc):
+    diags = verify_portfolio(copy.deepcopy(portfolio_doc))
+    assert not errors(diags), [str(d) for d in errors(diags)]
+
+
+def test_committed_artifacts_verify_clean():
+    """Every artifact committed to the repo (the bench reports; plan/tune
+    caches are gitignored) must pass static verification — the CI
+    `repro verify --all-artifacts` gate."""
+    out = subprocess.run(["git", "ls-files", "reports"], cwd=ROOT,
+                         capture_output=True, text=True, timeout=60)
+    files = [ROOT / f for f in out.stdout.split()
+             if f.endswith(".json")] if out.returncode == 0 else []
+    if not files:
+        files = sorted((ROOT / "reports" / "bench").glob("*.json"))
+    assert files, "no committed artifacts found"
+    for path in files:
+        kind, diags = verify_path(path)
+        assert kind != "unknown", path
+        assert not errors(diags), (path, [str(d) for d in errors(diags)])
+
+
+def test_local_plan_cache_verifies_clean():
+    """Plans the test/bench runs themselves cached on this machine must
+    verify (filename == recomputed digest included); stale entries from
+    older schema canons are expected to be *flagged*, not crash."""
+    for path in sorted((ROOT / "reports" / "plans").glob("*.json")):
+        kind, diags = verify_path(path)
+        assert kind == "plan", path
+        for d in errors(diags):
+            # only provenance/fingerprint staleness is tolerated (an old
+            # canon's digest); structural violations are never expected
+            assert d.rule in ("graph.fingerprint", "provenance.digest"), \
+                (path, str(d))
+
+
+# ------------------------------------------------------- mutation harness
+
+def _mut_boundary(doc):
+    for e in doc["schedule"]:
+        d = e.get("decision")
+        if d and d["c_cpu"] > 0 and d["c_gpu"] > 0 and "axis" not in d:
+            d["c_cpu"] += 8
+            return True
+    return False
+
+
+def _mut_default_axis(doc):
+    for e in doc["schedule"]:
+        if "decision" in e:
+            e["decision"]["axis"] = "channel"
+            return True
+    return False
+
+
+def _mut_default_mode(doc):
+    for e in doc["schedule"]:
+        d = e.get("decision", e)
+        op = d.get("op")
+        if op and op.get("kind") in ("attention", "ssm") and \
+                "mode" not in op:
+            op["mode"] = registry.default_mode(op["kind"])
+            return True
+    return False
+
+
+def _mut_empty_bucket(doc):
+    doc["provenance"]["bucket"] = ""
+    return True
+
+
+def _mut_typed_granularity(doc):
+    for e in doc["schedule"]:
+        d = e.get("decision")
+        if d and d.get("axis") == "head":
+            d["c_cpu"] += 1
+            d["c_gpu"] -= 1                 # sum preserved, grouping broken
+            return True
+    return False
+
+
+def _mut_typed_sum(doc):
+    for e in doc["schedule"]:
+        d = e.get("decision")
+        if d and d.get("axis") in ("head", "ssm-state"):
+            d["c_cpu"] += 1                 # sum != axis size
+            return True
+    return False
+
+
+def _mut_misaligned_tile(doc):
+    for e in doc["schedule"]:
+        d = e.get("decision")
+        if d and "tile" in d:
+            param = next(iter(d["tile"]))
+            d["tile"][param] = d["tile"][param] + 1   # breaks alignment
+            return True
+    return False
+
+
+def _mut_default_tile(doc):
+    for e in doc["schedule"]:
+        d = e.get("decision")
+        if d and "tile" not in d and d["op"]["kind"] == "linear":
+            op = registry.op_from_json(d["op"])
+            d["tile"] = registry.tile_to_json(registry.default_tile(op))
+            return True
+    return False
+
+
+def _mut_schema_version(doc):
+    doc["schema_version"] = 99
+    doc["provenance"]["schema_version"] = 99
+    return True
+
+
+def _mut_fingerprint(doc):
+    doc["provenance"]["network_fingerprint"] = "0" * 24
+    return True
+
+
+def _mut_provenance_field(doc):
+    doc["provenance"]["device"] = "some-other-device"
+    return True
+
+
+def _mut_pool_bytes(doc):
+    for e in doc["schedule"]:
+        if e["unit"] == "pool":
+            e["bytes"] = 0
+            return True
+    return False
+
+
+def _mut_negative_share(doc):
+    for e in doc["schedule"]:
+        if "decision" in e:
+            e["decision"]["c_cpu"] = -8
+            return True
+    return False
+
+
+def _mut_chain_ids(doc):
+    if doc.get("graph") is not None:
+        return False
+    for i, e in enumerate(doc["schedule"]):
+        e["id"] = f"n{i}"
+        return True
+    return False
+
+
+def _mut_segment_drop(doc):
+    segs = doc.get("segments")
+    if not segs:
+        return False
+    for s in segs:
+        if len(s["nodes"]) >= 2:            # an emptied segment would be
+            s["nodes"] = s["nodes"][:-1]    # malformed, not uncovered
+            return True
+    return False
+
+
+def _mut_segment_merge(doc):
+    segs = doc.get("segments")
+    if not segs or len(segs) < 2:
+        return False
+    a, b = segs[0], segs[1]
+    merged = {"kind": "fused", "nodes": a["nodes"] + b["nodes"]}
+    doc["segments"] = [merged] + segs[2:]
+    return True
+
+
+def _mut_segment_kind(doc):
+    segs = doc.get("segments")
+    if not segs:
+        return False
+    for s in segs:
+        if s["kind"] == "fused":
+            s["kind"] = "exclusive"
+            return True
+    return False
+
+
+def _mut_unit_kind(doc):
+    for e in doc["schedule"]:
+        if e.get("decision") and e["unit"] == "linear":
+            e["unit"] = "conv"              # decision op stays linear
+            return True
+    return False
+
+
+#: (name, mutator, acceptable rule ids) — each mutator returns False when
+#: the target plan has no site for it (skipped for that plan)
+MUTATIONS = [
+    ("boundary-flip", _mut_boundary, {"axis.shares"}),
+    ("default-axis-key", _mut_default_axis, {"schema.default-key"}),
+    ("default-mode-key", _mut_default_mode, {"schema.default-key"}),
+    ("empty-bucket-key", _mut_empty_bucket, {"schema.default-key"}),
+    ("head-split-granularity", _mut_typed_granularity, {"axis.legality"}),
+    ("typed-share-sum", _mut_typed_sum, {"axis.shares", "axis.legality"}),
+    ("tile-misalign", _mut_misaligned_tile, {"tile.legality"}),
+    ("tile-at-default", _mut_default_tile, {"schema.default-key"}),
+    ("schema-version", _mut_schema_version, {"schema.version"}),
+    ("fingerprint-corrupt", _mut_fingerprint, {"graph.fingerprint"}),
+    ("provenance-digest", _mut_provenance_field, {"provenance.digest"}),
+    ("pool-bytes-zero", _mut_pool_bytes, {"schema.malformed"}),
+    ("negative-share", _mut_negative_share, {"schema.malformed"}),
+    ("chain-id-keys", _mut_chain_ids, {"schema.default-key"}),
+    ("segment-drop-node", _mut_segment_drop, {"segment.cover"}),
+    ("segment-merge", _mut_segment_merge,
+     {"segment.cover", "segment.mismatch", "segment.gather",
+      "segment.convexity", "segment.elision"}),
+    ("segment-kind-flip", _mut_segment_kind,
+     {"segment.mismatch", "segment.gather"}),
+    ("unit-kind-flip", _mut_unit_kind,
+     {"schema.malformed", "graph.schedule"}),
+]
+
+
+@pytest.mark.parametrize("plan_name", ["resnet", "decoder", "tuned"])
+def test_mutation_harness(plan_name, resnet_doc, decoder_doc, tuned_doc):
+    base = {"resnet": resnet_doc, "decoder": decoder_doc,
+            "tuned": tuned_doc}[plan_name]
+    key = PlanProvenance.from_json(base["provenance"]).key
+    applied = caught = 0
+    misses = []
+    for name, mutate, expected_rules in MUTATIONS:
+        doc = copy.deepcopy(base)
+        if not mutate(doc):
+            continue                        # no site in this plan
+        applied += 1
+        # fingerprint mutation changes the digest too: only pass the
+        # expect_key when the provenance digest is the rule under test
+        expect = key if name == "provenance-digest" else None
+        got = {d.rule for d in errors(verify_plan(doc, expect_key=expect))}
+        if got & expected_rules:
+            caught += 1
+        else:
+            misses.append((name, sorted(got)))
+    assert applied >= 10, "mutation catalog barely applied"
+    assert caught == applied, f"uncaught mutations: {misses}"
+
+
+def test_every_emitted_rule_is_documented(resnet_doc):
+    """Rule ids are API: everything the verifier can emit is in RULES."""
+    for name, mutate, expected in MUTATIONS:
+        assert expected <= set(RULES), (name, expected - set(RULES))
+    doc = copy.deepcopy(resnet_doc)
+    for d in verify_plan(doc):
+        assert d.rule in RULES
+
+
+# ------------------------------------------------------ resource accounting
+
+def test_plan_stats_accounting(resnet_doc, decoder_doc):
+    st = plan_stats(copy.deepcopy(resnet_doc))
+    assert st.nodes == len(resnet_doc["schedule"])
+    assert 0 < st.coexec_nodes <= st.nodes
+    assert st.segments == len(resnet_doc["segments"])
+    assert st.peak_live_bytes > 0
+    assert st.peak_fast_bytes + st.peak_slow_bytes >= st.peak_live_bytes // 2
+    assert st.sync_points > 0 and st.boundary_bytes > 0
+    st2 = plan_stats(copy.deepcopy(decoder_doc))
+    assert st2.fused_segments >= 1
+    assert "sync points" in st2.summary()
+
+
+# ------------------------------------------------------ strict-load wiring
+
+def test_from_json_strict_by_default_with_optout(resnet_doc):
+    doc = copy.deepcopy(resnet_doc)
+    _mut_boundary(doc)
+    with pytest.raises(VerificationError) as ei:
+        CoexecPlan.from_json(doc)
+    assert any(d.rule == "axis.shares" for d in ei.value.diagnostics)
+    quarantined = CoexecPlan.from_json(doc, verify=False)   # opt-out loads
+    assert quarantined.provenance.device == "moto2022"
+
+
+def test_artifact_and_portfolio_rules(resnet_doc, portfolio_doc):
+    from repro.api import CompiledNetwork, Target
+    plan = CoexecPlan.from_json(copy.deepcopy(resnet_doc))
+    art = CompiledNetwork(plan=plan,
+                          target=Target(device="moto2022")).to_json()
+    assert not errors(verify_artifact(copy.deepcopy(art)))
+    bad = copy.deepcopy(art)
+    bad["mode"] = "tampered"
+    assert {d.rule for d in errors(verify_artifact(bad))} == \
+        {"artifact.checksum"}
+
+    pf = copy.deepcopy(portfolio_doc)
+    pf["entries"][0]["batch"] = 2           # tag no longer matches bucket
+    rules = {d.rule for d in errors(verify_portfolio(pf))}
+    assert "portfolio.bucket" in rules and "artifact.checksum" in rules
+
+
+def test_tune_entry_and_bench_rules(tmp_path):
+    from repro.runtime.autotune import TuneCache, TuneKey
+    op = registry.op_from_json(
+        {"kind": "linear", "L": 1, "C_in": 64, "C_out": 64})
+    key = TuneKey.for_op(op, "cpu", "cpu")
+    cache = TuneCache(tmp_path)
+    spec = registry.tile_spec("linear")
+    path = cache.put(key, spec.default_config(op), [("mn8/...", 1.0)])
+    doc = json.loads(path.read_text())
+    assert not errors(verify_tune_entry(doc, expect_key=path.stem))
+    bad = copy.deepcopy(doc)
+    bad["tile"]["bm"] = 7                    # misaligned
+    assert {d.rule for d in errors(verify_tune_entry(bad))} == \
+        {"tile.legality"}
+    stale = copy.deepcopy(doc)
+    stale["key"]["device"] = "elsewhere"
+    assert {d.rule for d in
+            errors(verify_tune_entry(stale, expect_key=path.stem))} == \
+        {"provenance.digest"}
+
+    bench = {"suite": "t", "metrics": [{"name": "a", "us_per_call": 1.0}]}
+    assert not errors(verify_bench_report(bench))
+    bench["metrics"].append({"name": "b", "us_per_call": float("nan")})
+    assert {d.rule for d in errors(verify_bench_report(bench))} == \
+        {"bench.metric"}
+
+
+def test_plan_cache_rejection_logged(tmp_path, resnet_doc):
+    """Corrupt/mismatched cache entries must miss *loudly*: once per
+    digest, naming the verifier rule that failed."""
+    from repro.runtime.cache import PlanCache
+    rejections.clear()
+    cache = PlanCache(tmp_path)
+    prov = PlanProvenance.from_json(copy.deepcopy(
+        resnet_doc["provenance"]))
+    path = cache.path_for(prov)
+    path.parent.mkdir(parents=True, exist_ok=True)
+
+    doc = copy.deepcopy(resnet_doc)
+    _mut_boundary(doc)
+    path.write_text(json.dumps(doc))
+    assert cache.get(prov) is None and cache.misses == 1
+    assert rejections.counts() == {"axis.shares": 1}
+
+    cache.get(prov)                          # same digest: logged once
+    assert rejections.total() == 1
+
+    path.write_text("{not json")
+    # a new digest would be a new entry; same digest stays deduplicated,
+    # so clear to observe the malformed rule
+    rejections.clear()
+    assert cache.get(prov) is None
+    assert rejections.counts() == {"schema.malformed": 1}
+    assert "cache rejections: 1" in rejections.summary()
+    rejections.clear()
+
+
+def test_explain_carries_verification_line(resnet_doc):
+    from repro.api import CompiledNetwork, Target
+    plan = CoexecPlan.from_json(copy.deepcopy(resnet_doc))
+    text = CompiledNetwork(plan=plan,
+                           target=Target(device="moto2022")).explain()
+    assert "verify: clean" in text
+
+
+# ------------------------------------------------------------------ linter
+
+def test_lint_src_is_clean():
+    assert lint_repo() == []
+
+
+def test_lint_flags_synthetic_violations(tmp_path):
+    pkg = tmp_path / "fakepkg"
+    (pkg / "graph").mkdir(parents=True)
+    (pkg / "kernels" / "thing").mkdir(parents=True)
+    (pkg / "graph" / "ir.py").write_text(
+        "from typing import TYPE_CHECKING\n"
+        "if TYPE_CHECKING:\n    import jax\n"       # guarded: legal
+        "import jax.numpy as jnp\n")                # top-level: flagged
+    (pkg / "kernels" / "thing" / "ops.py").write_text(
+        "def matmul(x, w, bm=None):\n"
+        "    bm = min(bm, 128)\n"                   # silent clamp: flagged
+        "    return x\n"
+        "def legal(x, op, tile=None):\n"
+        "    bs = min(512, op.S) if tile is None else tile.get('bs')\n"
+        "    return bs\n")
+    imp = lint_import_light(pkg)
+    assert [d.rule for d in imp] == ["lint.import-light"]
+    assert "ir.py:4" in imp[0].node
+    clamp = lint_silent_clamp(pkg)
+    assert [d.rule for d in clamp] == ["lint.no-silent-clamp"]
+    assert "ops.py:2" in clamp[0].node
+
+
+def test_lint_registry_completeness_is_green():
+    from repro.analysis.lint import lint_registry
+    assert lint_registry(package_root()) == []
+
+
+# --------------------------------------------------------------- CLI + CI
+
+def _jax_free_env():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return env
+
+
+def test_cli_verify_and_lint_never_import_jax(tmp_path, resnet_doc):
+    """Same discipline as the facade's import-light test: the whole
+    verify/lint CLI paths — including scanning real artifacts — must not
+    pull in jax."""
+    plan_file = tmp_path / "plan.json"
+    plan_file.write_text(json.dumps(resnet_doc))
+    code = (
+        "import sys\n"
+        "from repro.cli import main\n"
+        f"assert main(['verify', {str(plan_file)!r}]) == 0\n"
+        "assert main(['lint']) == 0\n"
+        "assert 'jax' not in sys.modules, 'jax was imported'\n"
+        "print('verify+lint jax-free')\n")
+    out = subprocess.run([sys.executable, "-c", code], env=_jax_free_env(),
+                         cwd=ROOT, capture_output=True, text=True,
+                         timeout=180)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "verify+lint jax-free" in out.stdout
+
+
+def test_cli_verify_exit_codes(tmp_path, resnet_doc, capsys):
+    from repro.cli import main
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(resnet_doc))
+    assert main(["verify", str(good)]) == 0
+    out = capsys.readouterr().out
+    assert "ok" in out and "plan" in out
+
+    bad_doc = copy.deepcopy(resnet_doc)
+    _mut_boundary(bad_doc)
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_doc))
+    assert main(["verify", str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "axis.shares" in out
+
+    assert main(["verify"]) == 2             # nothing to verify
+    assert main(["verify", str(good), "-v"]) == 0
+    assert "resource.accounting" in capsys.readouterr().out
+
+
+def test_cli_lint_exit_zero(capsys):
+    from repro.cli import main
+    assert main(["lint"]) == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+# ------------------------------------------------- scheduler replan gate
+
+def test_scheduler_replan_rejects_corrupted_candidate(monkeypatch):
+    """A corrupted replan candidate must never reach the slot pool: the
+    gate refuses the swap, records no ReplanEvent, and the old plan keeps
+    serving (the drift monitor still resets)."""
+    jax = pytest.importorskip("jax")
+    import dataclasses
+
+    import repro
+    from repro.core.predictor import (sample_conv_ops, sample_linear_ops,
+                                      train_predictor)
+    from repro.core.predictor.gbdt import GBDTParams
+    from repro.core.predictor.train import MuxPredictor
+    from repro.models import build_model, get_config
+    from repro.serving import (ContinuousScheduler, SchedulerConfig,
+                               ThrottleSim, poisson_requests)
+    fast = GBDTParams(n_estimators=30, max_depth=5, learning_rate=0.2)
+    lt, ct = sample_linear_ops(200, seed=1), sample_conv_ops(200, seed=1)
+    gp = MuxPredictor(
+        train_predictor(lt, "moto2022", "gpu", whitebox=True, params=fast),
+        train_predictor(ct, "moto2022", "gpu", whitebox=True, params=fast))
+    cp = MuxPredictor(
+        train_predictor(lt, "moto2022", "cpu3", whitebox=False, params=fast),
+        train_predictor(ct, "moto2022", "cpu3", whitebox=False, params=fast))
+    cfg = get_config("codeqwen15_7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as cache_dir:
+        pf = repro.compile_portfolio(
+            cfg, repro.Target(device="moto2022"), buckets=((2, 32),),
+            cache=cache_dir, predictors=(cp, gp))
+        bucket = pf.buckets[0]
+        old_key = pf.entries[bucket].key
+        cost = pf.entries[bucket].plan.end_to_end_us * 1e-6
+
+        from repro.api import CompiledNetwork
+        real_replan = CompiledNetwork.replan
+
+        def corrupted_replan(self, calibrator=None, **kw):
+            new, diff = real_replan(self, calibrator, **kw)
+            doc = new.plan.to_json()
+            assert _mut_negative_share(doc), "no decision to corrupt"
+            bad_plan = CoexecPlan.from_json(doc, verify=False)
+            bad = CompiledNetwork(plan=bad_plan, target=new.target,
+                                  mode=new.mode, predictors=new.predictors)
+            return bad, diff
+
+        monkeypatch.setattr(CompiledNetwork, "replan", corrupted_replan)
+        reqs = poisson_requests(
+            48, rate=0.1 / cost, vocab_size=cfg.vocab_size,
+            prompt_lens=(2, 4, 12), max_new=(2, 4), temperatures=(0.0,),
+            seed=23)
+        sched = ContinuousScheduler(
+            cfg, model, params, portfolio=pf, plan_cache=cache_dir,
+            config=SchedulerConfig(max_batch=2, max_len=32,
+                                   fidelity_every=4, fidelity_window=4,
+                                   drift_cooldown=2),
+            throttle=ThrottleSim(at_s=100 * cost, scale=2.5))
+        rep = sched.run(reqs)
+        assert rep.replan_events == [], \
+            "corrupted candidate reached the slot pool"
+        assert pf.entries[bucket].key == old_key
+        assert dataclasses.asdict(rep.stats[0]) is not None

@@ -230,8 +230,9 @@ def test_explain_lists_every_unit(mux_predictors, target, tmp_path):
     assert "co-executed" in text or "gpu-only" in text or "cpu-only" in text
     assert "pool" in text
     assert compiled.key in text
-    # one row per schedule unit plus header/summary
-    assert len(text.splitlines()) == len(compiled.plan.schedule) + 4
+    # one row per schedule unit plus header/summary/verification lines
+    assert len(text.splitlines()) == len(compiled.plan.schedule) + 5
+    assert "verify: clean" in text
 
 
 # ------------------------------------------------- fidelity summary guards
